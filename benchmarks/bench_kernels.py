@@ -1,0 +1,62 @@
+"""Kernel microbenchmarks: Pallas (interpret) vs jnp reference.
+
+On CPU the interpret-mode wall time is NOT the TPU performance; the
+purpose is (a) a regression baseline and (b) exercising every kernel's
+jit path end to end.  Derived column reports the analytic VMEM/flops.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import wall_us
+from repro.kernels import ref as R
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.fused_mlp import fused_mlp
+from repro.kernels.ssd_scan import ssd_scan
+
+
+def run() -> list[dict]:
+    rng = np.random.default_rng(0)
+    rows = []
+
+    B, Hq, Hkv, S, D = 1, 4, 2, 512, 128
+    q = jnp.asarray(rng.normal(size=(B, Hq, S, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, Hkv, S, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, Hkv, S, D)), jnp.float32)
+    rows.append({"name": "kernel/flash_attention(pallas-interp)",
+                 "us": wall_us(lambda: flash_attention(q, k, v)),
+                 "flops": 4 * B * Hq * S * S * D})
+    rows.append({"name": "kernel/flash_attention(ref)",
+                 "us": wall_us(lambda: R.flash_attention_ref(q, k, v))})
+
+    T, d, f = 256, 512, 1024
+    x = jnp.asarray(rng.normal(size=(T, d)), jnp.float32)
+    wn = jnp.ones((d,), jnp.float32)
+    wg = jnp.asarray(rng.normal(size=(d, f)) * .05, jnp.float32)
+    wu = jnp.asarray(rng.normal(size=(d, f)) * .05, jnp.float32)
+    wd = jnp.asarray(rng.normal(size=(f, d)) * .05, jnp.float32)
+    rows.append({"name": "kernel/fused_mlp(pallas-interp)",
+                 "us": wall_us(lambda: fused_mlp(x, wn, wg, wu, wd)),
+                 "flops": 6 * T * d * f})
+    rows.append({"name": "kernel/fused_mlp(ref)",
+                 "us": wall_us(lambda: R.fused_mlp_ref(x, wn, wg, wu, wd))})
+
+    b, s, h, p, g_, n = 1, 512, 8, 64, 1, 128
+    xs = jnp.asarray(rng.normal(size=(b, s, h, p)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(.01, .2, size=(b, s, h)), jnp.float32)
+    A = jnp.asarray(-rng.uniform(.5, 2., size=(h,)), jnp.float32)
+    Bm = jnp.asarray(rng.normal(size=(b, s, g_, n)), jnp.float32)
+    Cm = jnp.asarray(rng.normal(size=(b, s, g_, n)), jnp.float32)
+    rows.append({"name": "kernel/ssd_scan(pallas-interp)",
+                 "us": wall_us(lambda: ssd_scan(xs, dt, A, Bm, Cm,
+                                                chunk=128))})
+    rows.append({"name": "kernel/ssd_scan(ref)",
+                 "us": wall_us(lambda: R.ssd_scan_ref(xs, dt, A, Bm, Cm,
+                                                      chunk=128))})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,24 @@
+"""Shared benchmark helpers."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+
+def wall_us(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall-clock microseconds per call (jitted fns block_until_ready)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+def csv_row(name: str, us: float, derived: str = "") -> str:
+    return f"{name},{us:.1f},{derived}"

@@ -1,0 +1,43 @@
+"""Beyond-paper: the 40-cell LM roofline table from the dry-run sweep.
+
+Reads experiments/dryrun/*.json (produced by
+``python -m repro.launch.dryrun --sweep``) and emits the §Roofline
+table: three terms, dominant bottleneck, useful-compute ratio.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+OUT_DIR = "experiments/dryrun"
+
+
+def run() -> list[dict]:
+    rows = []
+    for f in sorted(glob.glob(os.path.join(OUT_DIR, "*__pod.json"))):
+        d = json.load(open(f))
+        if d.get("status") == "skip":
+            rows.append({"name": f"roofline/{d['arch']}/{d['shape']}",
+                         "status": "skip", "reason": d["reason"][:60]})
+            continue
+        if d.get("status") != "ok" or "t_compute" not in d:
+            rows.append({"name": f"roofline/{d.get('arch')}/{d.get('shape')}",
+                         "status": d.get("status", "?")})
+            continue
+        rows.append({
+            "name": f"roofline/{d['arch']}/{d['shape']}",
+            "Tc_ms": round(d["t_compute"] * 1e3, 3),
+            "Tm_ms": round(d["t_memory"] * 1e3, 3),
+            "Tx_ms": round(d["t_collective"] * 1e3, 3),
+            "dominant": d["dominant"],
+            "useful_ratio": round(d["useful_ratio"], 4),
+            "temp_gb_per_chip": round(
+                d["bytes_per_chip"].get("temp_size_in_bytes", 0) / 2**30, 2),
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,53 @@
+"""Benchmark driver: one module per paper table/figure (+ beyond-paper).
+
+Prints ``name,us_per_call,derived`` CSV per the harness contract; full
+row dicts go to experiments/bench_results.json.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import traceback
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+MODULES = [
+    "benchmarks.fig1_dataflow_latency",
+    "benchmarks.fig5_app_latency",
+    "benchmarks.fig6_opt_ladder",
+    "benchmarks.fig8_backends",
+    "benchmarks.table3_resources",
+    "benchmarks.bench_kernels",
+    "benchmarks.lm_roofline",
+]
+
+
+def main() -> None:
+    import importlib
+    all_rows = []
+    print("name,us_per_call,derived")
+    for mod_name in MODULES:
+        try:
+            mod = importlib.import_module(mod_name)
+            rows = mod.run()
+        except Exception:
+            print(f"{mod_name},nan,ERROR")
+            traceback.print_exc()
+            continue
+        for r in rows:
+            us = r.get("us", r.get("cpu_wall_us", r.get("ms", 0.0)))
+            if "ms" in r and "us" not in r and "cpu_wall_us" not in r:
+                us = r["ms"] * 1e3
+            derived = ";".join(f"{k}={v}" for k, v in r.items()
+                               if k not in ("name", "us", "cpu_wall_us"))
+            print(f"{r['name']},{float(us):.1f},{derived}")
+        all_rows.extend(rows)
+    os.makedirs("experiments", exist_ok=True)
+    with open("experiments/bench_results.json", "w") as f:
+        json.dump(all_rows, f, indent=1, default=str)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Paper Table III: post-synthesis resource usage per application.
+
+FPGA resources (CLB/LUT/FF/DSP/BRAM/SRL) have no TPU equivalent; the
+analogous budget is the fused kernel's VMEM working set (the paper's
+BRAM), the streamed burst size (DMA efficiency), the number of live
+FIFO channels (registers/buffers), and compiled code size.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import build_schedule, choose_tile, compile_graph
+from repro.core.apps import APPS
+from repro.core.vectorize import vmem_report
+
+H = W = 1024
+
+
+def run() -> list[dict]:
+    rows = []
+    for app in ("gaussian_blur", "laplace", "mean_filter", "sobel",
+                "harris", "bilateral_filter"):
+        g = APPS[app][0](H, W)
+        sched = build_schedule(g)
+        grp = sched.groups[0]
+        choose_tile(grp)
+        rep = vmem_report(grp)
+        appc = compile_graph(g, backend="pallas")
+        mem = appc.memory()
+        rows.append({
+            "name": f"table3/{app}",
+            "tile": rep["tile"],
+            "vmem_bytes": rep["vmem_bytes"],          # ~ BRAM
+            "burst_bytes": rep["burst_bytes"],        # ~ AXI burst
+            "fifo_channels": rep["n_channels"],       # ~ FF/SRL
+            "stages": len(grp.stages),                # ~ pipeline depth
+            "temp_bytes_compiled": mem.get("temp_size_in_bytes", 0),
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

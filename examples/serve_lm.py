@@ -1,0 +1,81 @@
+"""Batched serving driver: prefill + decode with a KV cache.
+
+Demonstrates the serving half of the generated host code: batch of
+prompts -> prefill (cache fill) -> token-by-token greedy decode, with
+per-phase timing and cache statistics.  Works for every assigned arch
+(attention KV caches, MLA latent caches, SSM states, hybrid mixes).
+
+Run:  PYTHONPATH=src python examples/serve_lm.py --arch mamba2_2p7b
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, get_smoke
+from repro.models import model as M
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite_3_2b", help=f"one of {ARCHS}")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen-len", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = get_smoke(args.arch)
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    max_len = args.prompt_len + args.gen_len + 8
+    B = args.batch
+    prompt = jax.random.randint(jax.random.PRNGKey(1),
+                                (B, args.prompt_len), 0, cfg.vocab_size)
+    kw = {}
+    if cfg.family == "encdec":
+        kw["enc_embeds"] = jnp.zeros((B, cfg.n_frontend_tokens,
+                                      cfg.d_model), jnp.float32)
+    if cfg.family == "vlm":
+        kw["extra_embeds"] = jnp.zeros((B, cfg.n_frontend_tokens,
+                                        cfg.d_model), jnp.float32)
+
+    prefill = jax.jit(lambda p, t, c: M.prefill(p, cfg, t, c, **kw))
+    decode = jax.jit(lambda p, t, c: M.decode_step(p, cfg, t, c))
+
+    cache = M.init_cache(cfg, B, max_len, dtype=jnp.float32)
+    cache_bytes = sum(x.size * x.dtype.itemsize
+                      for x in jax.tree.leaves(cache))
+    print(f"{cfg.name}: cache {cache_bytes/1e6:.2f} MB for B={B} "
+          f"max_len={max_len}")
+
+    t0 = time.perf_counter()
+    logits, cache = prefill(params, prompt, cache)
+    logits.block_until_ready()
+    t_prefill = time.perf_counter() - t0
+
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    out_tokens = [np.asarray(tok)]
+    t0 = time.perf_counter()
+    for _ in range(args.gen_len - 1):
+        logits, cache = decode(params, tok, cache)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        out_tokens.append(np.asarray(tok))
+    jax.block_until_ready(logits)
+    t_decode = time.perf_counter() - t0
+
+    gen = np.stack(out_tokens, 1)
+    print(f"prefill: {t_prefill*1e3:8.1f} ms "
+          f"({B*args.prompt_len/t_prefill:8.0f} tok/s)")
+    print(f"decode:  {t_decode*1e3:8.1f} ms "
+          f"({B*(args.gen_len-1)/t_decode:8.0f} tok/s)")
+    print(f"generated (first row): {gen[0][:16]}...")
+    assert np.isfinite(gen).all()
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,95 @@
+"""Three-term roofline from a compiled dry-run artifact.
+
+    T_compute    = HLO_FLOPs   / (chips * peak_FLOPs)
+    T_memory     = HLO_bytes   / (chips * HBM_bw)
+    T_collective = coll_bytes  / (chips * link_bw)
+
+Sources: ``compiled.cost_analysis()`` for FLOPs/bytes (whole-program,
+i.e. already global), the HLO text parser for collective bytes.
+MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE), D = tokens
+processed; the ratio MODEL_FLOPS/HLO_FLOPs exposes remat/dispatch
+waste.  No pass/fail — the table feeds the §Perf iteration loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.analysis.hlo import collective_bytes
+from repro.models.config import ModelConfig, ShapeConfig
+
+__all__ = ["HW", "V5E_HW", "RooflineReport", "analyze"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    peak_flops: float = 197e12      # bf16 / chip
+    hbm_bw: float = 819e9           # B/s / chip
+    link_bw: float = 50e9           # B/s / link (ICI)
+
+
+V5E_HW = HW()
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    coll_bytes: float
+    coll_breakdown: dict
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    dominant: str
+    model_flops: float
+    useful_ratio: float
+    bytes_per_chip: dict
+    note: str = ""
+
+    def row(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def summary(self) -> str:
+        return (f"{self.arch:22s} {self.shape:12s} {self.mesh:9s} "
+                f"Tc={self.t_compute*1e3:9.3f}ms "
+                f"Tm={self.t_memory*1e3:9.3f}ms "
+                f"Tx={self.t_collective*1e3:9.3f}ms "
+                f"dom={self.dominant:10s} "
+                f"useful={self.useful_ratio:6.3f}")
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """6·N·D with N = active params, D = tokens touched this step."""
+    n = cfg.n_active_params()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens          # forward only
+    return 2.0 * n * shape.global_batch  # decode: 1 token / sequence
+
+
+def analyze(arch: str, shape_cfg: ShapeConfig, mesh_name: str, chips: int,
+            cost: dict, hlo_text: str, mem: dict, cfg: ModelConfig,
+            hw: HW = V5E_HW, note: str = "") -> RooflineReport:
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    coll = collective_bytes(hlo_text)
+    t_c = flops / (chips * hw.peak_flops)
+    t_m = byts / (chips * hw.hbm_bw)
+    t_x = coll["total"] / (chips * hw.link_bw)
+    dom = max((("compute", t_c), ("memory", t_m), ("collective", t_x)),
+              key=lambda kv: kv[1])[0]
+    mf = model_flops(cfg, shape_cfg)
+    return RooflineReport(
+        arch=arch, shape=shape_cfg.name, mesh=mesh_name, chips=chips,
+        hlo_flops=flops, hlo_bytes=byts, coll_bytes=coll["total"],
+        coll_breakdown={k: v for k, v in coll.items()
+                        if k not in ("total", "ops")},
+        t_compute=t_c, t_memory=t_m, t_collective=t_x, dominant=dom,
+        model_flops=mf, useful_ratio=(mf / flops if flops else 0.0),
+        bytes_per_chip=mem, note=note)

@@ -1,0 +1,280 @@
+"""The paper's benchmark applications (Table I), in the stage DSL.
+
+Each builder returns a :class:`DataflowGraph` for one application, on
+single-channel float32 planes (RGB apps take three planes).  Stage
+counts match Table I's "compute" stages; the scheduler adds the
+read/write staging implicitly (the paper: "+2 memory stages for burst
+transfers").
+
+These graphs are consumed by examples/, benchmarks/fig5_app_latency.py,
+benchmarks/fig6_opt_ladder.py and the test-suite — one source program
+per app, every backend.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import DataflowGraph
+
+__all__ = ["APPS", "build_app"]
+
+
+# ----------------------------------------------------------------------
+# small stencil helpers (patches: (kh*kw, th, tw), row-major taps)
+# ----------------------------------------------------------------------
+def _conv(weights: np.ndarray) -> Callable:
+    # Taps are unrolled as scalar multiplies (zeros elided) — the same
+    # constant folding an FPGA synthesizer applies to fixed
+    # coefficients, and it keeps stage fns free of captured array
+    # constants (a Pallas kernel requirement).
+    taps = [float(v) for v in weights.reshape(-1)]
+
+    def fn(p):
+        acc = None
+        for i, t in enumerate(taps):
+            if t == 0.0:
+                continue
+            term = p[i] if t == 1.0 else p[i] * t
+            acc = term if acc is None else acc + term
+        return acc
+
+    return fn
+
+
+GAUSS3 = np.array([[1, 2, 1], [2, 4, 2], [1, 2, 1]], np.float32) / 16.0
+GAUSS5 = np.outer([1, 4, 6, 4, 1], [1, 4, 6, 4, 1]).astype(np.float32) / 256.0
+MEAN5 = np.ones((5, 5), np.float32) / 25.0
+SOBEL_X = np.array([[-1, 0, 1], [-2, 0, 2], [-1, 0, 1]], np.float32)
+SOBEL_Y = SOBEL_X.T.copy()
+LAPLACE3 = np.array([[0, 1, 0], [1, -4, 1], [0, 1, 0]], np.float32)
+JACOBI3 = np.array([[0, 1, 0], [1, 0, 1], [0, 1, 0]], np.float32) / 4.0
+
+
+def _sobel_mag(p):
+    gx = _conv(SOBEL_X)(p)
+    gy = _conv(SOBEL_Y)(p)
+    return jnp.sqrt(gx * gx + gy * gy + 1e-12)
+
+
+def _bilateral(sigma_s: float = 2.0, sigma_r: float = 0.25) -> Callable:
+    kh = kw = 5
+    ds = np.array([[(i - 2) ** 2 + (j - 2) ** 2 for j in range(kw)]
+                   for i in range(kh)], np.float32).reshape(-1)
+    ws = [float(v) for v in np.exp(-ds / (2 * sigma_s ** 2))]
+    inv2r = 1.0 / (2 * sigma_r ** 2)
+
+    def fn(p):
+        center = p[kh * kw // 2]
+        sum_w = None
+        sum_wp = None
+        for i, wsi in enumerate(ws):  # unrolled taps (scalar consts)
+            wr = jnp.exp(-(p[i] - center) ** 2 * inv2r) * wsi
+            sum_w = wr if sum_w is None else sum_w + wr
+            term = wr * p[i]
+            sum_wp = term if sum_wp is None else sum_wp + term
+        return sum_wp / (sum_w + 1e-12)
+
+    return fn
+
+
+# ----------------------------------------------------------------------
+# application builders
+# ----------------------------------------------------------------------
+def mean_filter(h: int, w: int) -> DataflowGraph:
+    g = DataflowGraph("mean_filter")
+    x = g.input("img", (h, w))
+    g.output(g.stencil(x, (5, 5), _conv(MEAN5), name="mean5"), "out")
+    return g
+
+
+def gaussian_blur(h: int, w: int) -> DataflowGraph:
+    g = DataflowGraph("gaussian_blur")
+    x = g.input("img", (h, w))
+    g.output(g.stencil(x, (5, 5), _conv(GAUSS5), name="gauss5"), "out")
+    return g
+
+
+def bilateral_filter(h: int, w: int) -> DataflowGraph:
+    g = DataflowGraph("bilateral_filter")
+    x = g.input("img", (h, w))
+    g.output(g.stencil(x, (5, 5), _bilateral(), name="bilateral5",
+                       ii=4.0, fill=64.0), "out")
+    return g
+
+
+def sobel_luma(h: int, w: int) -> DataflowGraph:
+    g = DataflowGraph("sobel_luma")
+    r = g.input("r", (h, w))
+    gr = g.input("g", (h, w))
+    b = g.input("b", (h, w))
+    luma = g.pointn([r, gr, b],
+                    lambda r, gc, b: 0.299 * r + 0.587 * gc + 0.114 * b,
+                    name="luma")
+    g.output(g.stencil(luma, (3, 3), _sobel_mag, name="sobel"), "out")
+    return g
+
+
+def unsharp_mask(h: int, w: int, amount: float = 1.5) -> DataflowGraph:
+    g = DataflowGraph("unsharp_mask")
+    x = g.input("img", (h, w))
+    x1, x2, x3 = g.split(x, 3)
+    blur = g.stencil(x1, (5, 5), _conv(GAUSS5), name="blur")
+    diff = g.point2(x2, blur, lambda a, b: a - b, name="highpass")
+    g.output(g.point2(x3, diff, lambda a, d: a + amount * d, name="sharpen"),
+             "out")
+    return g
+
+
+def filter_chain(h: int, w: int) -> DataflowGraph:
+    g = DataflowGraph("filter_chain")
+    x = g.input("img", (h, w))
+    c = x
+    for i in range(3):
+        c = g.stencil(c, (3, 3), _conv(GAUSS3), name=f"filt{i + 1}")
+    g.output(c, "out")
+    return g
+
+
+def jacobi(h: int, w: int) -> DataflowGraph:
+    g = DataflowGraph("jacobi")
+    x = g.input("img", (h, w))
+    g.output(g.stencil(x, (3, 3), _conv(JACOBI3), name="jacobi3"), "out")
+    return g
+
+
+def laplace(h: int, w: int) -> DataflowGraph:
+    g = DataflowGraph("laplace")
+    x = g.input("img", (h, w))
+    g.output(g.stencil(x, (3, 3), _conv(LAPLACE3), name="laplace3"), "out")
+    return g
+
+
+def square(h: int, w: int) -> DataflowGraph:
+    g = DataflowGraph("square")
+    x = g.input("img", (h, w))
+    g.output(g.point(x, lambda v: v * v, name="square"), "out")
+    return g
+
+
+def sobel(h: int, w: int) -> DataflowGraph:
+    g = DataflowGraph("sobel")
+    x = g.input("img", (h, w))
+    g.output(g.stencil(x, (3, 3), _sobel_mag, name="sobel3"), "out")
+    return g
+
+
+def harris(h: int, w: int, k: float = 0.04) -> DataflowGraph:
+    g = DataflowGraph("harris")
+    x = g.input("img", (h, w))
+    x1, x2 = g.split(x, 2)
+    ix = g.stencil(x1, (3, 3), _conv(SOBEL_X), name="Ix")
+    iy = g.stencil(x2, (3, 3), _conv(SOBEL_Y), name="Iy")
+    ixa, ixb = g.split(ix, 2, name="splitIx")
+    iya, iyb = g.split(iy, 2, name="splitIy")
+    ixx = g.point(ixa, lambda a: a * a, name="Ixx")
+    iyy = g.point(iya, lambda a: a * a, name="Iyy")
+    ixy = g.point2(ixb, iyb, lambda a, b: a * b, name="Ixy")
+    wxx = g.stencil(ixx, (5, 5), _conv(GAUSS5), name="WIxx")
+    wyy = g.stencil(iyy, (5, 5), _conv(GAUSS5), name="WIyy")
+    wxy = g.stencil(ixy, (5, 5), _conv(GAUSS5), name="WIxy")
+    resp = g.pointn(
+        [wxx, wyy, wxy],
+        lambda a, c, b: (a * c - b * b) - k * (a + c) * (a + c),
+        name="response")
+    g.output(resp, "out")
+    return g
+
+
+def shi_tomasi(h: int, w: int) -> DataflowGraph:
+    g = DataflowGraph("shi_tomasi")
+    x = g.input("img", (h, w))
+    x1, x2 = g.split(x, 2)
+    ix = g.stencil(x1, (3, 3), _conv(SOBEL_X), name="Ix")
+    iy = g.stencil(x2, (3, 3), _conv(SOBEL_Y), name="Iy")
+    ixa, ixb = g.split(ix, 2, name="splitIx")
+    iya, iyb = g.split(iy, 2, name="splitIy")
+    ixx = g.point(ixa, lambda a: a * a, name="Ixx")
+    iyy = g.point(iya, lambda a: a * a, name="Iyy")
+    ixy = g.point2(ixb, iyb, lambda a, b: a * b, name="Ixy")
+    wxx = g.stencil(ixx, (5, 5), _conv(GAUSS5), name="WIxx")
+    wyy = g.stencil(iyy, (5, 5), _conv(GAUSS5), name="WIyy")
+    wxy = g.stencil(ixy, (5, 5), _conv(GAUSS5), name="WIxy")
+
+    def lam_min(a, c, b):
+        tr2 = (a + c) * 0.5
+        det = a * c - b * b
+        return tr2 - jnp.sqrt(jnp.maximum(tr2 * tr2 - det, 0.0) + 1e-12)
+
+    g.output(g.pointn([wxx, wyy, wxy], lam_min, name="score"), "out")
+    return g
+
+
+def optical_flow_lk(h: int, w: int, eps: float = 1e-3) -> DataflowGraph:
+    """Lucas-Kanade optical flow (paper Fig. 4): 16 compute stages."""
+    g = DataflowGraph("optical_flow_lk")
+    f1 = g.input("f1", (h, w))
+    f2 = g.input("f2", (h, w))
+    f1a, f1b, f1c = g.split(f1, 3, name="split_f1")
+    # normalized derivative taps (sobel/8 ~= centered difference)
+    ix = g.stencil(f1a, (3, 3), _conv(SOBEL_X / 8.0), name="Ix")    # 1
+    iy = g.stencil(f1b, (3, 3), _conv(SOBEL_Y / 8.0), name="Iy")    # 2
+    it = g.point2(f2, f1c, lambda b, a: b - a, name="It")           # 3
+    ix1, ix2, ix3 = g.split(ix, 3, name="split_Ix")
+    iy1, iy2, iy3 = g.split(iy, 3, name="split_Iy")
+    it1, it2 = g.split(it, 2, name="split_It")
+    ixx = g.point(ix1, lambda a: a * a, name="IxIx")                # 4
+    iyy = g.point(iy1, lambda a: a * a, name="IyIy")                # 5
+    ixy = g.point2(ix2, iy2, lambda a, b: a * b, name="IxIy")       # 6
+    ixt = g.point2(ix3, it1, lambda a, b: a * b, name="IxIt")       # 7
+    iyt = g.point2(iy3, it2, lambda a, b: a * b, name="IyIt")       # 8
+    wxx = g.stencil(ixx, (5, 5), _conv(GAUSS5), name="WIxx")        # 9
+    wyy = g.stencil(iyy, (5, 5), _conv(GAUSS5), name="WIyy")        # 10
+    wxy = g.stencil(ixy, (5, 5), _conv(GAUSS5), name="WIxy")        # 11
+    wxt = g.stencil(ixt, (5, 5), _conv(GAUSS5), name="WIxt")        # 12
+    wyt = g.stencil(iyt, (5, 5), _conv(GAUSS5), name="WIyt")        # 13
+    wxx1, wxx2 = g.split(wxx, 2)
+    wyy1, wyy2 = g.split(wyy, 2)
+    wxy1, wxy2 = g.split(wxy, 2)
+    wxt1, wxt2 = g.split(wxt, 2)
+    wyt1, wyt2 = g.split(wyt, 2)
+
+    def vx(a, c, b, tx, ty):
+        det = a * c - b * b
+        return jnp.where(jnp.abs(det) > eps, (-c * tx + b * ty) / det, 0.0)
+
+    def vy(a, c, b, tx, ty):
+        det = a * c - b * b
+        return jnp.where(jnp.abs(det) > eps, (b * tx - a * ty) / det, 0.0)
+
+    g.output(g.pointn([wxx1, wyy1, wxy1, wxt1, wyt1], vx, name="Vx"),  # 14
+             "vx")
+    g.output(g.pointn([wxx2, wyy2, wxy2, wxt2, wyt2], vy, name="Vy"),  # 15
+             "vy")
+    return g
+
+
+#: name -> (builder, table-I stage count, n_inputs)
+APPS: dict[str, tuple[Callable[..., DataflowGraph], int, int]] = {
+    "mean_filter": (mean_filter, 1, 1),
+    "gaussian_blur": (gaussian_blur, 1, 1),
+    "bilateral_filter": (bilateral_filter, 1, 1),
+    "sobel_luma": (sobel_luma, 2, 3),
+    "unsharp_mask": (unsharp_mask, 3, 1),
+    "filter_chain": (filter_chain, 3, 1),
+    "jacobi": (jacobi, 1, 1),
+    "optical_flow_lk": (optical_flow_lk, 16, 2),
+    "harris": (harris, 9, 1),
+    "shi_tomasi": (shi_tomasi, 9, 1),
+    "laplace": (laplace, 1, 1),
+    "square": (square, 1, 1),
+    "sobel": (sobel, 1, 1),
+}
+
+
+def build_app(name: str, h: int = 1024, w: int = 1024) -> DataflowGraph:
+    if name not in APPS:
+        raise KeyError(f"unknown app {name!r}; choose from {sorted(APPS)}")
+    return APPS[name][0](h, w)

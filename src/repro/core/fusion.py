@@ -1,0 +1,246 @@
+"""Top-level kernel generation (FLOWER contribution C2).
+
+Lowers a :class:`FusionGroup` to one of three backends:
+
+- ``xla``        — the stages composed as ordinary jnp ops; XLA's own
+                   fuser handles them (portable backend #1).
+- ``xla_staged`` — same, but with ``lax.optimization_barrier`` after
+                   every stage so each intermediate materializes to HBM.
+                   This reproduces the paper's *AnyHLS / no-dataflow*
+                   baseline: disjoint per-stage kernels with a global
+                   memory round-trip between stages.
+- ``pallas``     — THE paper artifact: one fused streaming kernel.  The
+                   grid walks output tiles; each grid step DMAs an
+                   (optionally halo-expanded) tile of every group input
+                   HBM→VMEM (the generated *read task* / burst
+                   transfer), pushes it through all stages in
+                   topological order inside VMEM (tasks connected by
+                   depth-2 FIFOs == Pallas' double-buffered pipeline),
+                   and DMAs the output tile back (the *write task*).
+
+Boundary semantics are zero-padding and are *bit-exact* across all
+three backends: inside the fused kernel, every stage output is masked
+to zero outside the logical image domain, which reproduces exactly the
+reference's per-stage ``jnp.pad`` behaviour at tile borders.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from repro.core.graph import (Channel, DataflowGraph, GraphError, Stage,
+                              _apply_stage_reference)
+from repro.core.schedule import FusionGroup, Schedule, build_schedule
+from repro.core.vectorize import TPUSpec, V5E, choose_tile
+
+__all__ = ["lower_group", "lower_graph", "BACKENDS"]
+
+BACKENDS = ("xla", "xla_staged", "pallas")
+
+
+# ----------------------------------------------------------------------
+# XLA backends
+# ----------------------------------------------------------------------
+def lower_group_xla(group: FusionGroup, staged: bool = False) -> Callable:
+    """Compose the group's stages as whole-array jnp ops.
+
+    With ``staged=True`` an optimization barrier follows every stage, so
+    XLA cannot fuse across stages — each intermediate round-trips
+    through HBM, exactly like AnyHLS' disjoint IP blocks.
+    """
+
+    def run(env_in: dict[Channel, Any]) -> dict[Channel, Any]:
+        env = dict(env_in)
+        for st in group.stages:
+            vals = [env[c] for c in st.inputs]
+            outs = _apply_stage_reference(st, vals)
+            outs = [o.astype(c.dtype) for o, c in zip(outs, st.outputs)]
+            if staged:
+                outs = list(lax.optimization_barrier(tuple(outs)))
+            for ch, v in zip(st.outputs, outs):
+                env[ch] = v
+        return {ch: env[ch] for ch in group.outputs}
+
+    return run
+
+
+# ----------------------------------------------------------------------
+# Pallas streaming backend (the generated top-level kernel)
+# ----------------------------------------------------------------------
+def lower_group_pallas(group: FusionGroup, spec: TPUSpec = V5E,
+                       vector_factor: int = 1,
+                       interpret: bool = True) -> Callable:
+    if group.is_trivial:
+        raise GraphError("cannot pallas-lower a custom/reduce group")
+    tile = group.tile or choose_tile(group, spec, vector_factor)
+    th, tw = tile
+    H, W = group.stages[0].outputs[0].shape
+    Hp, Wp = _round_up(H, th), _round_up(W, tw)
+    grid = (Hp // th, Wp // tw)
+
+    in_specs = []
+    for ch in group.inputs:
+        hy, hx = group.halo.get(ch, (0, 0))
+        in_specs.append(pl.BlockSpec(
+            (pl.Element(th + 2 * hy), pl.Element(tw + 2 * hx)),
+            functools.partial(_in_index, th=th, tw=tw)))
+    out_specs = [pl.BlockSpec((th, tw), lambda i, j: (i, j))
+                 for _ in group.outputs]
+    out_shapes = [jax.ShapeDtypeStruct((Hp, Wp), ch.dtype)
+                  for ch in group.outputs]
+
+    kernel = functools.partial(
+        _group_kernel, group=group, tile=tile, plane=(H, W),
+        n_in=len(group.inputs))
+
+    call = pl.pallas_call(
+        kernel, grid=grid, in_specs=in_specs, out_specs=out_specs,
+        out_shape=out_shapes, interpret=interpret)
+
+    def run(env_in: dict[Channel, Any]) -> dict[Channel, Any]:
+        ins = []
+        for ch in group.inputs:
+            hy, hx = group.halo.get(ch, (0, 0))
+            x = jnp.asarray(env_in[ch], dtype=ch.dtype)
+            # The generated read task: zero-pad by the cumulative halo
+            # and up to a whole number of tiles; each grid step then
+            # bursts a contiguous (th+2hy, tw+2hx) block into VMEM.
+            x = jnp.pad(x, ((hy, Hp - H + hy), (hx, Wp - W + hx)))
+            ins.append(x)
+        outs = call(*ins)
+        if not isinstance(outs, (tuple, list)):
+            outs = (outs,)
+        return {ch: o[:H, :W] for ch, o in zip(group.outputs, outs)}
+
+    return run
+
+
+def _in_index(i, j, *, th, tw):
+    # Element-indexed: the block's top-left corner in the *padded* input
+    # is (i*th, j*tw); with the host-side pad of (hy, hx) this centers
+    # the halo window on the output tile.
+    return (i * th, j * tw)
+
+
+def _group_kernel(*refs, group: FusionGroup, tile: tuple[int, int],
+                  plane: tuple[int, int], n_in: int) -> None:
+    th, tw = tile
+    H, W = plane
+    in_refs, out_refs = refs[:n_in], refs[n_in:]
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    env: dict[Channel, Any] = {}
+    for ch, ref in zip(group.inputs, in_refs):
+        env[ch] = ref[...]
+
+    halo = group.halo
+    for st in group.stages:  # already in topological order
+        oh = _stage_out_halo(st, halo)
+        vals = []
+        for ch in st.inputs:
+            need = (oh[0] + st.halo[0], oh[1] + st.halo[1])
+            vals.append(_crop(env[ch], halo.get(ch, (0, 0)), need, th, tw))
+        outs = _apply_stage_tile(st, vals, oh, th, tw)
+        for ch, v in zip(st.outputs, outs):
+            ch_halo = halo.get(ch, (0, 0))
+            v = _crop(v, oh, ch_halo, th, tw).astype(ch.dtype)
+            # zero outside the logical image: reproduces per-stage
+            # zero-padding semantics bit-exactly at tile borders.
+            env[ch] = _mask_to_image(v, ch_halo, i, j, th, tw, H, W)
+
+    for ch, ref in zip(group.outputs, out_refs):
+        ref[...] = _crop(env[ch], halo.get(ch, (0, 0)), (0, 0), th, tw)
+
+
+def _stage_out_halo(st: Stage, halo: dict[Channel, tuple[int, int]]
+                    ) -> tuple[int, int]:
+    hs = [halo.get(ch, (0, 0)) for ch in st.outputs]
+    return (max(h[0] for h in hs), max(h[1] for h in hs))
+
+
+def _crop(x, have: tuple[int, int], need: tuple[int, int],
+          th: int, tw: int):
+    dy, dx = have[0] - need[0], have[1] - need[1]
+    if dy < 0 or dx < 0:
+        raise GraphError(f"halo underflow: have {have}, need {need}")
+    if dy == 0 and dx == 0:
+        return x
+    return x[dy:dy + th + 2 * need[0], dx:dx + tw + 2 * need[1]]
+
+
+def _apply_stage_tile(st: Stage, vals: list, oh: tuple[int, int],
+                      th: int, tw: int) -> list:
+    if st.kind == "point":
+        return [st.fn(vals[0])]
+    if st.kind == "pointN":
+        return [st.fn(*vals)]
+    if st.kind == "split":
+        return [vals[0] for _ in st.outputs]
+    if st.kind == "stencil":
+        kh, kw = st.window
+        x = vals[0]  # (th + 2(oh+sh), tw + 2(ow+sw))
+        out_h, out_w = th + 2 * oh[0], tw + 2 * oh[1]
+        views = [x[di:di + out_h, dj:dj + out_w]
+                 for di in range(kh) for dj in range(kw)]
+        patches = jnp.stack(views, axis=0)
+        return [st.fn(patches)]
+    raise GraphError(f"stage kind {st.kind!r} is not tile-streamable")
+
+
+def _mask_to_image(v, oh: tuple[int, int], i, j, th: int, tw: int,
+                   H: int, W: int):
+    eh, ew = th + 2 * oh[0], tw + 2 * oh[1]
+    rows = lax.broadcasted_iota(jnp.int32, (eh, ew), 0) + i * th - oh[0]
+    cols = lax.broadcasted_iota(jnp.int32, (eh, ew), 1) + j * tw - oh[1]
+    ok = (rows >= 0) & (rows < H) & (cols >= 0) & (cols < W)
+    return jnp.where(ok, v, jnp.zeros_like(v))
+
+
+# ----------------------------------------------------------------------
+# whole-graph lowering
+# ----------------------------------------------------------------------
+def lower_group(group: FusionGroup, backend: str, spec: TPUSpec = V5E,
+                vector_factor: int = 1, interpret: bool = True) -> Callable:
+    if group.is_trivial or backend == "xla":
+        return lower_group_xla(group, staged=False)
+    if backend == "xla_staged":
+        return lower_group_xla(group, staged=True)
+    if backend == "pallas":
+        return lower_group_pallas(group, spec, vector_factor, interpret)
+    raise GraphError(f"unknown backend {backend!r}; choose from {BACKENDS}")
+
+
+def lower_graph(graph: DataflowGraph, backend: str = "pallas",
+                schedule: Schedule | None = None, spec: TPUSpec = V5E,
+                vector_factor: int = 1, interpret: bool = True,
+                ) -> tuple[Callable, Schedule]:
+    """Lower a whole dataflow graph; returns ``(run, schedule)``.
+
+    ``run`` maps ``{input_name: array} -> {output_name: array}`` and is
+    jit-compatible.  One source program, any backend — the paper's
+    portability claim (Fig. 8/9) maps to ``backend=`` here.
+    """
+    sched = schedule or build_schedule(graph)
+    fns = [lower_group(g, backend, spec, vector_factor, interpret)
+           for g in sched.groups]
+
+    def run(inputs: dict[str, Any]) -> dict[str, Any]:
+        env: dict[Channel, Any] = {}
+        for ch in graph.graph_inputs:
+            env[ch] = jnp.asarray(inputs[ch.name], dtype=ch.dtype)
+        for fn, g in zip(fns, sched.groups):
+            outs = fn({ch: env[ch] for ch in g.inputs})
+            env.update(outs)
+        return {ch.name: env[ch] for ch in graph.graph_outputs}
+
+    return run, sched
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m

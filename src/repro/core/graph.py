@@ -1,0 +1,368 @@
+"""Dataflow graph extraction and validation (FLOWER contribution C1).
+
+The paper extracts a dataflow graph from a single-source program: every
+DSL call creates a *task* (here: :class:`Stage`), every virtual image /
+``channel`` becomes an edge (:class:`Channel`).  The compiler validates
+that the graph is acyclic and that every channel is written exactly once
+and read exactly once (fan-out must be explicit via a ``split`` stage),
+mirroring Section IV-A of the paper.
+
+Stages are *untimed* descriptions of computation on whole logical
+arrays; the scheduler (:mod:`repro.core.schedule`) decides tiling and the
+lowering (:mod:`repro.core.fusion`) turns fusion groups into either a
+fused streaming Pallas kernel or an XLA chain.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "Channel",
+    "Stage",
+    "DataflowGraph",
+    "GraphError",
+    "CycleError",
+    "ChannelContractError",
+]
+
+
+class GraphError(ValueError):
+    """Base class for dataflow-graph validation errors."""
+
+
+class CycleError(GraphError):
+    """The dataflow graph contains a cycle."""
+
+
+class ChannelContractError(GraphError):
+    """A channel violates the single-writer / single-reader contract."""
+
+
+@dataclasses.dataclass(eq=False)
+class Channel:
+    """An edge of the dataflow graph (the paper's ``channel``).
+
+    A channel that has no producer is a *graph input* (it will be fed
+    from HBM by a generated read task); a channel marked as output is a
+    *graph output* (drained to HBM by a generated write task).
+    """
+
+    name: str
+    shape: tuple[int, ...]
+    dtype: Any
+    producer: "Stage | None" = None
+    consumers: list["Stage"] = dataclasses.field(default_factory=list)
+    is_graph_input: bool = False
+    is_graph_output: bool = False
+    #: memory-bundle id (paper: AXI bundle ``mem1..4``); assigned by the
+    #: scheduler for graph I/O channels only.
+    bundle: int | None = None
+    #: FIFO depth (double buffering by default, like ``depth = 2``).
+    depth: int = 2
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (f"Channel({self.name}, {self.shape}, {np.dtype(self.dtype).name},"
+                f" in={self.is_graph_input}, out={self.is_graph_output})")
+
+    @property
+    def nbytes(self) -> int:
+        return int(np.prod(self.shape)) * np.dtype(self.dtype).itemsize
+
+
+@dataclasses.dataclass(eq=False)
+class Stage:
+    """A node of the dataflow graph (the paper's *task*).
+
+    ``kind`` determines how the stage is scheduled and lowered:
+
+    - ``point``:    elementwise, ``fn(x) -> y`` (shape preserving)
+    - ``pointN``:   elementwise over N inputs, ``fn(x1..xN) -> y``
+    - ``stencil``:  local operator with window ``(kh, kw)``;
+                    ``fn(patches)`` where ``patches`` has shape
+                    ``(kh*kw, *tile)`` holding the shifted views
+                    (line-buffer analogue)
+    - ``split``:    1 input -> k identical outputs (explicit fan-out)
+    - ``reduce``:   global reduction ``fn(x) -> scalar/vector``
+    - ``custom``:   opaque whole-array function (breaks fusion groups;
+                    used to embed hand-written Pallas kernels)
+    """
+
+    name: str
+    kind: str
+    fn: Callable[..., Any] | None
+    inputs: list[Channel]
+    outputs: list[Channel]
+    #: stencil window (kh, kw); (1, 1) for non-stencil stages.
+    window: tuple[int, int] = (1, 1)
+    #: per-item issue interval in cycles for the latency simulator.
+    ii: float = 1.0
+    #: pipeline fill latency in cycles for the latency simulator.
+    fill: float = 8.0
+    #: extra metadata (e.g. custom lowering hooks).
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"Stage({self.name}:{self.kind})"
+
+    @property
+    def halo(self) -> tuple[int, int]:
+        return ((self.window[0] - 1) // 2, (self.window[1] - 1) // 2)
+
+
+class DataflowGraph:
+    """A FLOWER dataflow graph under construction.
+
+    The builder methods mirror the AnyHLS image-processing DSL
+    (``iteration_point``, ``split_image``, ...) from the paper's running
+    example.  Calling them *is* the graph extraction: the user writes a
+    single-source program, and the graph falls out of the calls.
+
+    Explicit channels (``graph.channel(...)`` + ``graph.task(...)``)
+    are supported too, matching the paper's ``static mut chan`` style;
+    with them the user can construct invalid graphs, which
+    :meth:`validate` rejects with precise errors.
+    """
+
+    def __init__(self, name: str = "app") -> None:
+        self.name = name
+        self.stages: list[Stage] = []
+        self.channels: list[Channel] = []
+        self._counter = 0
+
+    # ------------------------------------------------------------------
+    # channel / task primitives (explicit wiring, paper-style)
+    # ------------------------------------------------------------------
+    def _fresh(self, prefix: str) -> str:
+        self._counter += 1
+        return f"{prefix}{self._counter}"
+
+    def channel(self, shape: Sequence[int], dtype: Any = jnp.float32,
+                name: str | None = None) -> Channel:
+        ch = Channel(name or self._fresh("chan"), tuple(shape), dtype)
+        self.channels.append(ch)
+        return ch
+
+    def input(self, name: str, shape: Sequence[int],
+              dtype: Any = jnp.float32) -> Channel:
+        """Declare a graph input (an HBM-resident image/tensor)."""
+        ch = self.channel(shape, dtype, name=name)
+        ch.is_graph_input = True
+        return ch
+
+    def output(self, ch: Channel, name: str | None = None) -> Channel:
+        """Mark a channel as a graph output (drained to HBM)."""
+        if name is not None:
+            ch.name = name
+        ch.is_graph_output = True
+        return ch
+
+    def task(self, name: str, kind: str, fn: Callable | None,
+             inputs: Sequence[Channel], outputs: Sequence[Channel],
+             window: tuple[int, int] = (1, 1), *, ii: float = 1.0,
+             fill: float = 8.0, meta: dict | None = None) -> Stage:
+        st = Stage(name, kind, fn, list(inputs), list(outputs),
+                   window=window, ii=ii, fill=fill, meta=meta or {})
+        for ch in inputs:
+            ch.consumers.append(st)
+        for ch in outputs:
+            if ch.producer is not None:
+                raise ChannelContractError(
+                    f"channel {ch.name!r} written by both "
+                    f"{ch.producer.name!r} and {st.name!r}")
+            ch.producer = st
+        self.stages.append(st)
+        return st
+
+    # ------------------------------------------------------------------
+    # DSL builders (implicit wiring; these mirror the AnyHLS library)
+    # ------------------------------------------------------------------
+    def point(self, x: Channel, fn: Callable, name: str | None = None,
+              dtype: Any = None, **kw) -> Channel:
+        """``iteration_point``: out[x, y] = fn(in[x, y])."""
+        out = self.channel(x.shape, dtype or x.dtype)
+        self.task(name or self._fresh("point"), "point", fn, [x], [out], **kw)
+        return out
+
+    def point2(self, a: Channel, b: Channel, fn: Callable,
+               name: str | None = None, dtype: Any = None, **kw) -> Channel:
+        """``iteration_point2``: out = fn(a, b) elementwise."""
+        if a.shape != b.shape:
+            raise GraphError(f"point2 shape mismatch: {a.shape} vs {b.shape}")
+        out = self.channel(a.shape, dtype or a.dtype)
+        self.task(name or self._fresh("point2"), "pointN", fn, [a, b], [out], **kw)
+        return out
+
+    def pointn(self, chans: Sequence[Channel], fn: Callable,
+               name: str | None = None, dtype: Any = None, **kw) -> Channel:
+        shapes = {c.shape for c in chans}
+        if len(shapes) != 1:
+            raise GraphError(f"pointn shape mismatch: {sorted(shapes)}")
+        out = self.channel(chans[0].shape, dtype or chans[0].dtype)
+        self.task(name or self._fresh("pointn"), "pointN", fn, list(chans),
+                  [out], **kw)
+        return out
+
+    def stencil(self, x: Channel, window: tuple[int, int], fn: Callable,
+                name: str | None = None, dtype: Any = None, **kw) -> Channel:
+        """Local operator: ``fn(patches)`` with patches ``(kh*kw, *tile)``.
+
+        Edge handling is zero-padding (the scheduler materializes the
+        halo; see :mod:`repro.core.fusion`).
+        """
+        if window[0] % 2 != 1 or window[1] % 2 != 1:
+            raise GraphError(f"stencil window must be odd, got {window}")
+        out = self.channel(x.shape, dtype or x.dtype)
+        self.task(name or self._fresh("stencil"), "stencil", fn, [x], [out],
+                  window=window, **kw)
+        return out
+
+    def split(self, x: Channel, k: int = 2, name: str | None = None,
+              **kw) -> tuple[Channel, ...]:
+        """``split_image``: explicit fan-out of a channel to k copies."""
+        outs = tuple(self.channel(x.shape, x.dtype) for _ in range(k))
+        self.task(name or self._fresh("split"), "split", None, [x],
+                  list(outs), **kw)
+        return outs
+
+    def reduce(self, x: Channel, fn: Callable, out_shape: Sequence[int] = (),
+               name: str | None = None, dtype: Any = None, **kw) -> Channel:
+        out = self.channel(tuple(out_shape), dtype or x.dtype)
+        self.task(name or self._fresh("reduce"), "reduce", fn, [x], [out], **kw)
+        return out
+
+    def custom(self, chans: Sequence[Channel], fn: Callable,
+               out_shapes: Sequence[tuple[int, ...]],
+               out_dtypes: Sequence[Any] | None = None,
+               name: str | None = None, meta: dict | None = None,
+               **kw) -> tuple[Channel, ...]:
+        """Opaque whole-array stage (embeds hand-written kernels)."""
+        out_dtypes = out_dtypes or [chans[0].dtype] * len(out_shapes)
+        outs = tuple(self.channel(s, d) for s, d in zip(out_shapes, out_dtypes))
+        self.task(name or self._fresh("custom"), "custom", fn, list(chans),
+                  list(outs), meta=meta, **kw)
+        return outs
+
+    # ------------------------------------------------------------------
+    # validation (paper Section IV-A) and topological sort
+    # ------------------------------------------------------------------
+    @property
+    def graph_inputs(self) -> list[Channel]:
+        return [c for c in self.channels if c.is_graph_input]
+
+    @property
+    def graph_outputs(self) -> list[Channel]:
+        return [c for c in self.channels if c.is_graph_output]
+
+    def validate(self) -> None:
+        """Check the canonical-form contract; raise GraphError if violated."""
+        for ch in self.channels:
+            n_writers = 0 if ch.producer is None else 1
+            if ch.is_graph_input and n_writers:
+                raise ChannelContractError(
+                    f"graph input {ch.name!r} must not have a producer "
+                    f"(written by {ch.producer.name!r})")
+            if not ch.is_graph_input and ch.producer is None:
+                raise ChannelContractError(
+                    f"channel {ch.name!r} is never written and is not a "
+                    f"graph input")
+            n_readers = len(ch.consumers)
+            if n_readers > 1:
+                names = [s.name for s in ch.consumers]
+                raise ChannelContractError(
+                    f"channel {ch.name!r} is read {n_readers} times by "
+                    f"{names}; insert an explicit split stage")
+            if n_readers == 0 and not ch.is_graph_output:
+                raise ChannelContractError(
+                    f"channel {ch.name!r} is never read and is not a graph "
+                    f"output")
+            if ch.is_graph_output and ch.is_graph_input:
+                raise ChannelContractError(
+                    f"channel {ch.name!r} cannot be both graph input and "
+                    f"output")
+        self.toposort()  # raises CycleError on cycles
+
+    def toposort(self) -> list[Stage]:
+        """Kahn's algorithm; deterministic (insertion order tie-break).
+
+        This is the paper's scheduling step: the generated top-level
+        kernel calls tasks in this order so every channel is written
+        before it is read.  Stages disconnected from the rest still get
+        scheduled (the paper: "tasks that are isolated from the rest of
+        the graph ... execute in parallel with the rest").
+        """
+        indeg: dict[Stage, int] = {}
+        for st in self.stages:
+            indeg[st] = sum(1 for ch in st.inputs if ch.producer is not None)
+        ready = [st for st in self.stages if indeg[st] == 0]
+        order: list[Stage] = []
+        while ready:
+            st = ready.pop(0)
+            order.append(st)
+            for ch in st.outputs:
+                for consumer in ch.consumers:
+                    indeg[consumer] -= 1
+                    if indeg[consumer] == 0:
+                        ready.append(consumer)
+        if len(order) != len(self.stages):
+            stuck = [s.name for s in self.stages if s not in set(order)]
+            raise CycleError(f"dataflow graph has a cycle through {stuck}")
+        return order
+
+    # ------------------------------------------------------------------
+    # reference semantics: execute the graph stage-by-stage with numpy-ish
+    # jnp ops on whole arrays.  This is the oracle every backend is
+    # checked against.
+    # ------------------------------------------------------------------
+    def reference_eval(self, inputs: dict[str, Any]) -> dict[str, Any]:
+        self.validate()
+        env: dict[Channel, Any] = {}
+        for ch in self.graph_inputs:
+            if ch.name not in inputs:
+                raise GraphError(f"missing graph input {ch.name!r}")
+            val = jnp.asarray(inputs[ch.name], dtype=ch.dtype)
+            if tuple(val.shape) != ch.shape:
+                raise GraphError(
+                    f"input {ch.name!r}: expected shape {ch.shape}, got "
+                    f"{tuple(val.shape)}")
+            env[ch] = val
+        for st in self.toposort():
+            vals = [env[c] for c in st.inputs]
+            outs = _apply_stage_reference(st, vals)
+            for ch, v in zip(st.outputs, outs):
+                env[ch] = v.astype(ch.dtype)
+        return {ch.name: env[ch] for ch in self.graph_outputs}
+
+
+def extract_patches(x: jnp.ndarray, window: tuple[int, int]) -> jnp.ndarray:
+    """Zero-padded shifted views, shape ``(kh*kw, *x.shape)``.
+
+    This is the reference semantics of a stencil stage's input: the
+    FPGA line buffer delivering the window, in tile form.
+    """
+    kh, kw = window
+    ph, pw = (kh - 1) // 2, (kw - 1) // 2
+    xp = jnp.pad(x, ((ph, ph), (pw, pw)))
+    h, w = x.shape
+    views = [xp[i:i + h, j:j + w] for i in range(kh) for j in range(kw)]
+    return jnp.stack(views, axis=0)
+
+
+def _apply_stage_reference(st: Stage, vals: list[Any]) -> list[Any]:
+    if st.kind == "point":
+        return [st.fn(vals[0])]
+    if st.kind == "pointN":
+        return [st.fn(*vals)]
+    if st.kind == "stencil":
+        return [st.fn(extract_patches(vals[0], st.window))]
+    if st.kind == "split":
+        return [vals[0] for _ in st.outputs]
+    if st.kind == "reduce":
+        return [st.fn(vals[0])]
+    if st.kind == "custom":
+        out = st.fn(*vals)
+        return list(out) if isinstance(out, (tuple, list)) else [out]
+    raise GraphError(f"unknown stage kind {st.kind!r}")

@@ -1,0 +1,240 @@
+"""Scheduling: fusion groups, halo accumulation, channel depths, bundles.
+
+This is FLOWER contribution C2 (top-level kernel generation) plus C3c
+(memory-bundle assignment).  Given a validated :class:`DataflowGraph`,
+the scheduler
+
+1. topologically sorts the stages (write-before-read order),
+2. partitions them into *fusion groups* — maximal chains of
+   tile-streamable stages (point / pointN / stencil / split) that will
+   become ONE fused streaming kernel (the paper's top-level kernel with
+   ``#pragma HLS DATAFLOW``); ``custom`` and ``reduce`` stages are
+   group-breaking and run as their own kernels,
+3. computes the *cumulative halo* each channel must carry so that
+   downstream stencils have their windows available inside the fused
+   kernel (the line-buffer analysis),
+4. assigns memory bundles to graph I/O channels so parallel DAG paths
+   use distinct HBM buffers (paper Fig. 4: ``mem1..4``),
+5. budgets VMEM: each live channel inside a group costs
+   ``tile_bytes * depth`` (depth-2 FIFO == double buffering).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.graph import Channel, DataflowGraph, GraphError, Stage
+
+__all__ = ["FusionGroup", "Schedule", "build_schedule"]
+
+#: stage kinds that can be fused into one streaming kernel
+FUSIBLE_KINDS = frozenset({"point", "pointN", "stencil", "split"})
+
+
+@dataclasses.dataclass
+class FusionGroup:
+    """A set of stages lowered to a single streaming kernel."""
+
+    stages: list[Stage]
+    #: channels entering the group (read from HBM by the kernel)
+    inputs: list[Channel]
+    #: channels leaving the group (written to HBM by the kernel)
+    outputs: list[Channel]
+    #: channels internal to the group (VMEM-only; the FIFO channels)
+    internal: list[Channel]
+    #: per-channel cumulative halo (hy, hx) required inside the kernel
+    halo: dict[Channel, tuple[int, int]]
+    #: selected tile (th, tw); filled in by the vectorizer
+    tile: tuple[int, int] | None = None
+
+    @property
+    def is_trivial(self) -> bool:
+        """Groups of one non-fusible stage (custom / reduce)."""
+        return len(self.stages) == 1 and self.stages[0].kind not in FUSIBLE_KINDS
+
+    def vmem_bytes(self, tile: tuple[int, int] | None = None) -> int:
+        """Double-buffered VMEM working set for a candidate tile.
+
+        Every channel live inside the kernel holds an expanded tile of
+        ``(th + 2hy, tw + 2hx)`` elements at FIFO depth ``ch.depth``;
+        stencil stages additionally materialize their ``kh*kw`` shifted
+        views (the register-file cost of the window).
+        """
+        tile = tile or self.tile
+        if tile is None:
+            raise GraphError("no tile selected for group")
+        th, tw = tile
+        total = 0
+        for ch in self.inputs + self.outputs + self.internal:
+            hy, hx = self.halo.get(ch, (0, 0))
+            total += (th + 2 * hy) * (tw + 2 * hx) * _itemsize(ch) * ch.depth
+        for st in self.stages:
+            if st.kind == "stencil":
+                kh, kw = st.window
+                out = st.outputs[0]
+                hy, hx = self.halo.get(out, (0, 0))
+                total += kh * kw * (th + 2 * hy) * (tw + 2 * hx) * _itemsize(out)
+        return total
+
+
+def _itemsize(ch: Channel) -> int:
+    return np.dtype(ch.dtype).itemsize
+
+
+@dataclasses.dataclass
+class Schedule:
+    graph: DataflowGraph
+    order: list[Stage]
+    groups: list[FusionGroup]
+    #: bundle id per graph-I/O channel (paper: AXI bundles)
+    bundles: dict[Channel, int]
+    n_bundles: int
+
+    def describe(self) -> str:
+        lines = [f"schedule for {self.graph.name!r}: "
+                 f"{len(self.order)} stages -> {len(self.groups)} kernels"]
+        for gi, g in enumerate(self.groups):
+            kind = "custom" if g.is_trivial else "dataflow"
+            names = ",".join(s.name for s in g.stages)
+            lines.append(f"  kernel[{gi}] ({kind}): {names}")
+            lines.append(f"    inputs={[c.name for c in g.inputs]} "
+                         f"outputs={[c.name for c in g.outputs]} "
+                         f"fifo={[c.name for c in g.internal]}")
+        lines.append("  bundles: " + ", ".join(
+            f"{c.name}->mem{b}" for c, b in self.bundles.items()))
+        return "\n".join(lines)
+
+
+def build_schedule(graph: DataflowGraph, n_bundles: int = 4) -> Schedule:
+    graph.validate()
+    order = graph.toposort()
+    groups = _partition_groups(order)
+    for g in groups:
+        _classify_channels(g, graph)
+        g.halo = _halo_analysis(g)
+    bundles = _assign_bundles(graph, n_bundles)
+    return Schedule(graph, order, groups, bundles, n_bundles)
+
+
+# ----------------------------------------------------------------------
+# group partitioning
+# ----------------------------------------------------------------------
+def _partition_groups(order: list[Stage]) -> list[FusionGroup]:
+    """Greedy partitioning of the topo order into fusion groups.
+
+    A stage joins the current group iff it is fusible, works on the
+    same 2-D plane shape as the group, and *all* of its non-graph-input
+    producers are already inside the group (so the group stays a
+    contiguous subgraph and channel writes precede reads inside the
+    fused kernel).
+    """
+    groups: list[FusionGroup] = []
+    current: list[Stage] = []
+    current_shape: tuple[int, ...] | None = None
+
+    def flush() -> None:
+        nonlocal current, current_shape
+        if current:
+            groups.append(FusionGroup(current, [], [], [], {}))
+        current = []
+        current_shape = None
+
+    for st in order:
+        fusible = (st.kind in FUSIBLE_KINDS
+                   and all(len(c.shape) == 2 for c in st.inputs + st.outputs))
+        if not fusible:
+            flush()
+            groups.append(FusionGroup([st], [], [], [], {}))
+            continue
+        shape = st.outputs[0].shape
+        producers_inside = all(
+            ch.producer is None or ch.producer in current
+            for ch in st.inputs)
+        if current and (shape != current_shape or not producers_inside):
+            flush()
+        current.append(st)
+        current_shape = shape
+    flush()
+    return groups
+
+
+def _classify_channels(g: FusionGroup, graph: DataflowGraph) -> None:
+    inside = set(g.stages)
+    seen: set[Channel] = set()
+    for st in g.stages:
+        for ch in st.inputs:
+            if ch in seen:
+                continue
+            seen.add(ch)
+            if ch.producer not in inside:
+                g.inputs.append(ch)
+        for ch in st.outputs:
+            if ch in seen:
+                continue
+            seen.add(ch)
+            consumers_inside = ch.consumers and all(
+                c in inside for c in ch.consumers)
+            if ch.is_graph_output or not consumers_inside:
+                g.outputs.append(ch)
+            else:
+                g.internal.append(ch)
+
+
+# ----------------------------------------------------------------------
+# halo (line-buffer) analysis
+# ----------------------------------------------------------------------
+def _halo_analysis(g: FusionGroup) -> dict[Channel, tuple[int, int]]:
+    """Cumulative halo per channel, by backward DP over the group.
+
+    ``halo(ch) = max over consumers st of halo(st.output) + st.halo``;
+    group outputs carry halo (0, 0).  This is exactly the line-buffer
+    depth a chained FPGA stencil pipeline needs, expressed in tiles.
+    """
+    halo: dict[Channel, tuple[int, int]] = {}
+    inside = set(g.stages)
+    for ch in g.outputs:
+        halo[ch] = (0, 0)
+    for st in reversed(g.stages):  # reverse topo order within the group
+        out_halos = [halo.get(ch, (0, 0)) for ch in st.outputs]
+        oh = (max(h[0] for h in out_halos), max(h[1] for h in out_halos))
+        ih = (oh[0] + st.halo[0], oh[1] + st.halo[1])
+        for ch in st.inputs:
+            prev = halo.get(ch, (0, 0))
+            cand = ih if ch.producer in inside or ch in g.inputs else (0, 0)
+            halo[ch] = (max(prev[0], cand[0]), max(prev[1], cand[1]))
+    return halo
+
+
+# ----------------------------------------------------------------------
+# memory bundles (paper Fig. 4)
+# ----------------------------------------------------------------------
+def _assign_bundles(graph: DataflowGraph, n_bundles: int) -> dict[Channel, int]:
+    """Assign distinct HBM "bundles" to parallel I/O paths.
+
+    Heuristic matching the paper: I/O channels on *different* branches
+    of the DAG should land on different bundles so their transfers do
+    not serialize on one interface.  We walk graph I/O in order and
+    round-robin, but force siblings (channels touching the same stage)
+    apart when possible.
+    """
+    io = graph.graph_inputs + graph.graph_outputs
+    bundles: dict[Channel, int] = {}
+    nxt = 0
+    for ch in io:
+        taken = set()
+        peers = ch.consumers + ([ch.producer] if ch.producer else [])
+        for st in peers:
+            for other in st.inputs + st.outputs:
+                if other in bundles:
+                    taken.add(bundles[other])
+        b = nxt % n_bundles
+        for _ in range(n_bundles):
+            if b not in taken:
+                break
+            b = (b + 1) % n_bundles
+        bundles[ch] = b
+        ch.bundle = b
+        nxt += 1
+    return bundles

@@ -1,0 +1,94 @@
+"""Tile / vector-factor selection (FLOWER contribution C3b).
+
+On the FPGA, FLOWER widens the datapath (``int4`` channels for vector
+factor 4) to match the 512-bit memory bus.  The TPU analogue: pick the
+streamed tile so its minor dimension is a multiple of the 128-lane VPU
+(and MXU) width, its second-minor a multiple of the 8-row sublane, and
+the double-buffered working set of the whole fused group fits in VMEM.
+
+The *vector factor* maps to how many 128-lane vectors a tile row
+carries; the *burst length* maps to the tile byte count per DMA
+(bigger tiles == longer HBM bursts == better DMA efficiency, up to the
+VMEM budget).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.schedule import FusionGroup
+
+__all__ = ["TPUSpec", "choose_tile", "vmem_report"]
+
+LANE = 128     # VPU/MXU lane width
+SUBLANE = 8    # float32 sublane rows
+
+
+@dataclasses.dataclass(frozen=True)
+class TPUSpec:
+    """Per-chip hardware constants (TPU v5e by default)."""
+
+    vmem_bytes: int = 96 * 2**20        # budget (of 128 MiB physical)
+    hbm_bytes: int = 16 * 2**30
+    peak_flops_bf16: float = 197e12
+    hbm_bw: float = 819e9
+    ici_bw_per_link: float = 50e9
+
+
+V5E = TPUSpec()
+
+
+def choose_tile(group: FusionGroup, spec: TPUSpec = V5E,
+                vector_factor: int = 1,
+                max_tile: tuple[int, int] = (256, 1024)) -> tuple[int, int]:
+    """Pick (th, tw) for a fusion group.
+
+    Start from the largest hardware-aligned tile `<= max_tile` bounded
+    by the plane shape; shrink rows first (keeps lane utilization),
+    then lanes, until the double-buffered VMEM budget holds.
+    ``vector_factor`` forces the minor dim to ``128 * vector_factor``
+    at minimum — the paper's explicit vectorization knob.
+    """
+    shape = group.stages[0].outputs[0].shape
+    if len(shape) != 2:
+        raise ValueError(f"generic fusion tiles 2-D planes, got {shape}")
+    H, W = shape
+    tw = min(_round_up(min(W, max_tile[1]), LANE), _round_up(W, LANE))
+    tw = max(tw, LANE * vector_factor)
+    th = min(_round_up(min(H, max_tile[0]), SUBLANE), _round_up(H, SUBLANE))
+
+    while group.vmem_bytes((th, tw)) > spec.vmem_bytes:
+        if th > SUBLANE:
+            th = max(SUBLANE, th // 2)
+        elif tw > LANE * vector_factor:
+            tw = max(LANE * vector_factor, tw // 2)
+        else:
+            raise ValueError(
+                f"group {[s.name for s in group.stages]} cannot fit VMEM "
+                f"budget {spec.vmem_bytes} even at minimal tile "
+                f"({SUBLANE}, {LANE * vector_factor}): "
+                f"{group.vmem_bytes((th, tw))} bytes")
+    group.tile = (th, tw)
+    return group.tile
+
+
+def vmem_report(group: FusionGroup) -> dict:
+    th, tw = group.tile
+    return {
+        "tile": group.tile,
+        "vector_factor": tw // LANE,
+        "vmem_bytes": group.vmem_bytes(),
+        "n_channels": len(group.inputs) + len(group.outputs)
+        + len(group.internal),
+        "burst_bytes": max(
+            (th + 2 * hy) * (tw + 2 * hx)
+            * np.dtype(ch.dtype).itemsize
+            for ch in group.inputs
+            for hy, hx in [group.halo.get(ch, (0, 0))]
+        ) if group.inputs else 0,
+    }
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m

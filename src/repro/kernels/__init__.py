@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the compute hot-spots (+ ops.py wrappers, ref.py oracles).
+
+- stream_pipeline.py — generic fused N-stage streaming pipeline
+  (standalone form of the generated top-level kernel in core/fusion.py)
+- flash_attention.py — streaming attention over KV blocks
+- decode_attention.py — single-token attention vs KV cache
+- fused_mlp.py — RMSNorm->SwiGLU with d_ff streamed through VMEM
+- ssd_scan.py — Mamba2 SSD chunked scan with VMEM-carried state
+
+All validated in interpret mode against ref.py; models use kernels
+through ops.py only.
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

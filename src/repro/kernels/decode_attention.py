@@ -1,0 +1,119 @@
+"""Single-token (decode) attention Pallas kernel.
+
+Decode attention is the memory-bound end of the roofline: one query
+token versus an S-long KV cache.  FLOWER's burst-transfer insight
+applies directly — the KV cache is streamed through VMEM in long
+contiguous blocks (one DMA burst per block) while the online-softmax
+state rides in VMEM scratch; the cache is read from HBM exactly once.
+
+GQA layout trick: the ``G = Hq/Hkv`` query heads that share one KV head
+form the *rows* of the matmul tile, so the MXU sees a (G, D) x (D, bk)
+problem instead of G rank-1 products (G is padded to the 8-row
+sublane).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["decode_attention"]
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, bias_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, scale: float):
+    ki = pl.program_id(1)
+    nk = pl.num_programs(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)                  # (G, D)
+    k = k_ref[0].astype(jnp.float32)                  # (bk, D)
+    v = v_ref[0].astype(jnp.float32)                  # (bk, D)
+    logits = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale   # (G, bk)
+    logits = logits + bias_ref[0].astype(jnp.float32)[None, :]
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(logits, -1, keepdims=True))
+    p = jnp.exp(logits - m_new)
+    p = jnp.where(m_new > NEG_INF / 2, p, 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = alpha * l_ref[...] + jnp.sum(p, -1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _done():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "scale", "interpret"))
+def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     bias: jnp.ndarray | None = None,
+                     block_k: int = 512, scale: float | None = None,
+                     interpret: bool = True) -> jnp.ndarray:
+    """q: (B, Hq, Dk); k: (B, Hkv, S, Dk); v: (B, Hkv, S, Dv);
+    bias: (B, S) additive mask.  Returns (B, Hq, Dv).
+
+    ``bias`` carries -inf for cache slots past the current length.
+    Dv may differ from Dk (MLA latent cache).
+    """
+    B, Hq, D = q.shape
+    _, Hkv, S, _ = k.shape
+    Dv = v.shape[-1]
+    G = Hq // Hkv
+    Gp = _round_up(G, 8)                      # sublane alignment
+    scale = scale if scale is not None else 1.0 / np.sqrt(D)
+    bk = min(block_k, _round_up(S, 128))
+    Sp = _round_up(S, bk)
+
+    if bias is None:
+        bias = jnp.zeros((B, S), jnp.float32)
+    bias = jnp.pad(bias.astype(jnp.float32), ((0, 0), (0, Sp - S)),
+                   constant_values=NEG_INF)
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, Sp - S), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, Sp - S), (0, 0)))
+
+    qg = q.reshape(B, Hkv, G, D)
+    qg = jnp.pad(qg, ((0, 0), (0, 0), (0, Gp - G), (0, 0)))
+    qf = qg.reshape(B * Hkv, Gp, D)
+    kf = kp.reshape(B * Hkv, Sp, D)
+    vf = vp.reshape(B * Hkv, Sp, Dv)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale),
+        grid=(B * Hkv, Sp // bk),
+        in_specs=[
+            pl.BlockSpec((1, Gp, D), lambda bh, ki: (bh, 0, 0)),
+            pl.BlockSpec((1, bk, D), lambda bh, ki: (bh, ki, 0)),
+            pl.BlockSpec((1, bk, Dv), lambda bh, ki: (bh, ki, 0)),
+            pl.BlockSpec((1, bk), lambda bh, ki, Hkv=Hkv: (bh // Hkv, ki)),
+        ],
+        out_specs=pl.BlockSpec((1, Gp, Dv), lambda bh, ki: (bh, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hkv, Gp, Dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((Gp, 1), jnp.float32),
+            pltpu.VMEM((Gp, 1), jnp.float32),
+            pltpu.VMEM((Gp, Dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf, bias)
+    return out.reshape(B, Hkv, Gp, Dv)[:, :, :G].reshape(B, Hq, Dv)
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m

@@ -1,0 +1,143 @@
+"""Streaming (flash) attention Pallas kernel.
+
+This is the FLOWER dataflow transformation applied to attention: the
+naive kernel materializes the (Sq, Sk) logits to HBM (a multi-stage
+chain with a global-memory round trip); the streaming kernel walks KV
+*blocks* through VMEM like FIFO items, carrying the online-softmax
+state (m, l, acc) in VMEM scratch — read task (DMA of Q/K/V tiles),
+compute tasks (logits → rescale → accumulate), write task (normalized
+output tile).  HBM traffic drops from O(Sq·Sk) to O(Sq·D + Sk·D).
+
+Layout: the MXU wants the contracting dim minor — all matmuls here are
+(bq, D)·(D, bk) and (bq, bk)·(bk, D) with D, bk multiples of 128.
+
+Grid: ``(B*Hq, Sq/bq, Sk/bk)``; the KV dimension is innermost and
+"arbitrary" (sequential) so the scratch carry is legal; B*Hq and the Q
+dimension are parallel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention"]
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, bias_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, scale: float, causal: bool,
+            bq: int, bk: int, seq_k: int):
+    # note: Dv (v/o/acc minor dim) may differ from Dk (q/k minor dim),
+    # e.g. MLA absorbed attention (MQA over the latent cache).
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)               # (bq, D)
+    k = k_ref[0].astype(jnp.float32)               # (bk, D)
+    v = v_ref[0].astype(jnp.float32)               # (bk, D)
+    logits = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale  # (bq, bk)
+    logits = logits + bias_ref[0].astype(jnp.float32)[None, :]
+    if causal:
+        qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        logits = jnp.where(kpos <= qpos + (seq_k - pl.num_programs(1) * bq),
+                           logits, NEG_INF)
+
+    m_prev = m_ref[...]                            # (bq, 1)
+    m_cur = jnp.max(logits, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(logits - m_new)                    # (bq, bk)
+    # fully-masked rows: m_new is still NEG_INF -> exp(0)=1 garbage.
+    p = jnp.where(m_new > NEG_INF / 2, p, 0.0)
+    alpha = jnp.exp(m_prev - m_new)                # (bq, 1)
+    l_new = alpha * l_ref[...] + jnp.sum(p, -1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ki == nk - 1)
+    def _done():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "block_q", "block_k", "scale", "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    bias: jnp.ndarray | None = None, causal: bool = True,
+                    block_q: int = 128, block_k: int = 128,
+                    scale: float | None = None,
+                    interpret: bool = True) -> jnp.ndarray:
+    """q: (B, Hq, Sq, Dk); k: (B, Hkv, Sk, Dk); v: (B, Hkv, Sk, Dv);
+    bias: (B, Sk) additive.  Returns (B, Hq, Sq, Dv).
+
+    Sq, Sk are padded to block multiples internally; GQA handled by the
+    KV index map (no materialized repeat).  Dv may differ from Dk (MLA
+    absorbed attention == MQA over the latent cache).
+    """
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    Dv = v.shape[-1]
+    G = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / np.sqrt(D)
+    bq = min(block_q, _round_up(Sq, 8))
+    bk = min(block_k, _round_up(Sk, 128))
+    Sqp, Skp = _round_up(Sq, bq), _round_up(Sk, bk)
+
+    if bias is None:
+        bias = jnp.zeros((B, Sk), q.dtype)
+    # fold pad-slot masking into the additive bias (the FLOWER trick of
+    # folding boundary handling into the stream contents)
+    bias = jnp.pad(bias.astype(jnp.float32), ((0, 0), (0, Skp - Sk)),
+                   constant_values=NEG_INF)
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, Sqp - Sq), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, Skp - Sk), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, Skp - Sk), (0, 0)))
+
+    qf = qp.reshape(B * Hq, Sqp, D)
+    kf = kp.reshape(B * Hkv, Skp, D)
+    vf = vp.reshape(B * Hkv, Skp, Dv)
+
+    grid = (B * Hq, Sqp // bq, Skp // bk)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal, bq=bq,
+                          bk=bk, seq_k=Skp),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, bk, D), lambda bh, qi, ki, G=G: (bh // G, ki, 0)),
+            pl.BlockSpec((1, bk, Dv), lambda bh, qi, ki, G=G: (bh // G, ki, 0)),
+            pl.BlockSpec((1, bk), lambda bh, qi, ki, Hq=Hq: (bh // Hq, ki)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, Dv), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hq, Sqp, Dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, Dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf, bias)
+    return out.reshape(B, Hq, Sqp, Dv)[:, :, :Sq]
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m

@@ -1,0 +1,102 @@
+"""Fused RMSNorm -> SwiGLU MLP streaming Pallas kernel.
+
+This is the LM-block instance of FLOWER's top-level-kernel generation:
+the chain  norm -> (x@Wg, x@Wu) -> silu·mul -> @Wd  is a 4-stage
+dataflow graph whose intermediates (the (T, d_ff) activations) normally
+round-trip through HBM.  The fused kernel streams d_ff *blocks* through
+VMEM — each grid step computes a (bt, bf) slice of the hidden
+activation and immediately contracts it into the (bt, d) output
+accumulator, so the d_ff-sized intermediate never exists in HBM.
+
+HBM traffic: naive = 2·T·d + 3·T·f + weights; fused = 2·T·d + weights.
+For f >> d (e.g. qwen1.5-32b: f = 27392 vs d = 5120) this removes the
+dominant activation traffic term.
+
+Grid: (T/bt, f/bf); f innermost ("arbitrary") carrying the output
+accumulator; the normalized input tile is computed once per row block
+(at f-block 0) and parked in VMEM scratch — the FIFO between the norm
+task and the matmul tasks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["fused_mlp"]
+
+
+def _kernel(x_ref, wn_ref, wg_ref, wu_ref, wd_ref, o_ref,
+            xn_ref, acc_ref, *, eps: float):
+    fi = pl.program_id(1)
+    nf = pl.num_programs(1)
+
+    @pl.when(fi == 0)
+    def _norm():
+        x = x_ref[...].astype(jnp.float32)            # (bt, d)
+        var = jnp.mean(x * x, axis=-1, keepdims=True)
+        xn_ref[...] = x * jax.lax.rsqrt(var + eps) \
+            * wn_ref[...].astype(jnp.float32)[None, :]
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    xn = xn_ref[...]                                   # (bt, d) f32
+    g = jax.lax.dot_general(xn, wg_ref[...].astype(jnp.float32),
+                            (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    u = jax.lax.dot_general(xn, wu_ref[...].astype(jnp.float32),
+                            (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    a = jax.nn.silu(g) * u                             # (bt, bf)
+    acc_ref[...] += jax.lax.dot_general(
+        a, wd_ref[...].astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(fi == nf - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_f",
+                                             "interpret", "eps"))
+def fused_mlp(x: jnp.ndarray, w_norm: jnp.ndarray, w_gate: jnp.ndarray,
+              w_up: jnp.ndarray, w_down: jnp.ndarray, eps: float = 1e-6,
+              block_t: int = 256, block_f: int = 512,
+              interpret: bool = True) -> jnp.ndarray:
+    """x: (T, d); w_gate/w_up: (d, f); w_down: (f, d) -> (T, d)."""
+    T, d = x.shape
+    f = w_gate.shape[1]
+    bt = min(block_t, _round_up(T, 8))
+    bf = min(block_f, _round_up(f, 128))
+    Tp, fp = _round_up(T, bt), _round_up(f, bf)
+
+    xp = jnp.pad(x, ((0, Tp - T), (0, 0)))
+    wg = jnp.pad(w_gate, ((0, 0), (0, fp - f)))
+    wu = jnp.pad(w_up, ((0, 0), (0, fp - f)))
+    wd = jnp.pad(w_down, ((0, fp - f), (0, 0)))
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, eps=eps),
+        grid=(Tp // bt, fp // bf),
+        in_specs=[
+            pl.BlockSpec((bt, d), lambda t, fi: (t, 0)),
+            pl.BlockSpec((d,), lambda t, fi: (0,)),
+            pl.BlockSpec((d, bf), lambda t, fi: (0, fi)),
+            pl.BlockSpec((d, bf), lambda t, fi: (0, fi)),
+            pl.BlockSpec((bf, d), lambda t, fi: (fi, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, d), lambda t, fi: (t, 0)),
+        out_shape=jax.ShapeDtypeStruct((Tp, d), x.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bt, d), jnp.float32),
+            pltpu.VMEM((bt, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xp, w_norm, wg, wu, wd)
+    return out[:T]
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m

@@ -1,0 +1,191 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each ``*_ref`` function defines the semantics that the corresponding
+kernel must reproduce (tests assert allclose across shape/dtype
+sweeps).  They are also the XLA lowering used by the models when
+``use_pallas=False`` (the dry-run path), so kernel and model semantics
+can never diverge.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "rmsnorm_ref", "flash_attention_ref", "decode_attention_ref",
+    "fused_mlp_ref", "ssd_scan_ref", "ssd_sequential_ref",
+]
+
+
+def rmsnorm_ref(x: jnp.ndarray, w: jnp.ndarray,
+                eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)
+            ).astype(x.dtype)
+
+
+def _repeat_kv(k: jnp.ndarray, n_rep: int) -> jnp.ndarray:
+    if n_rep == 1:
+        return k
+    b, h, s, d = k.shape
+    return jnp.broadcast_to(k[:, :, None], (b, h, n_rep, s, d)
+                            ).reshape(b, h * n_rep, s, d)
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        bias: jnp.ndarray | None = None,
+                        causal: bool = True,
+                        scale: float | None = None) -> jnp.ndarray:
+    """Naive attention oracle.
+
+    q: (B, Hq, Sq, D); k, v: (B, Hkv, Sk, D); bias: (B, Sk) additive
+    (used for padding masks).  GQA handled by repeating KV heads.
+    """
+    B, Hq, Sq, D = q.shape
+    Hkv = k.shape[1]
+    k = _repeat_kv(k, Hq // Hkv)
+    v = _repeat_kv(v, Hq // Hkv)
+    scale = scale if scale is not None else 1.0 / np.sqrt(D)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if bias is not None:
+        logits = logits + bias[:, None, None, :].astype(jnp.float32)
+    if causal:
+        Sk = k.shape[2]
+        qi = jnp.arange(Sq)[:, None] + (Sk - Sq)
+        ki = jnp.arange(Sk)[None, :]
+        logits = jnp.where(ki <= qi, logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def decode_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                         bias: jnp.ndarray | None = None,
+                         scale: float | None = None) -> jnp.ndarray:
+    """Single-token attention oracle. q: (B, Hq, D); k/v: (B, Hkv, S, D).
+
+    ``bias`` (B, S) carries the -inf padding mask for cache slots beyond
+    the current length (decode is never causal-within-step).
+    """
+    out = flash_attention_ref(q[:, :, None], k, v, bias=bias, causal=False,
+                              scale=scale)
+    return out[:, :, 0]
+
+
+def fused_mlp_ref(x: jnp.ndarray, w_norm: jnp.ndarray, w_gate: jnp.ndarray,
+                  w_up: jnp.ndarray, w_down: jnp.ndarray,
+                  eps: float = 1e-6) -> jnp.ndarray:
+    """RMSNorm -> SwiGLU MLP oracle.  x: (T, d); w_gate/w_up: (d, f);
+    w_down: (f, d).  Matmuls accumulate in f32."""
+    h = rmsnorm_ref(x, w_norm, eps).astype(jnp.float32)
+    g = h @ w_gate.astype(jnp.float32)
+    u = h @ w_up.astype(jnp.float32)
+    a = jax.nn.silu(g) * u
+    return (a @ w_down.astype(jnp.float32)).astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# Mamba2 SSD (state-space duality) scan
+# ----------------------------------------------------------------------
+def _segsum(x: jnp.ndarray) -> jnp.ndarray:
+    """segsum(x)[..., i, j] = sum_{k=j+1..i} x[..., k]  (−inf for j>i)."""
+    L = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    ii = jnp.arange(L)
+    mask = ii[:, None] >= ii[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_scan_ref(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                 B: jnp.ndarray, C: jnp.ndarray,
+                 chunk: int = 64,
+                 init_state: jnp.ndarray | None = None
+                 ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD scan (Mamba2, arXiv:2405.21060 Listing 1).
+
+    x:  (b, s, h, p)   inputs per head
+    dt: (b, s, h)      positive step sizes (already softplus'ed)
+    A:  (h,)           negative decay rates
+    B:  (b, s, g, n)   input projections  (g groups broadcast to heads)
+    C:  (b, s, g, n)   output projections
+    Returns (y (b, s, h, p), final_state (b, h, p, n)).
+    """
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    assert s % chunk == 0, f"seq {s} not divisible by chunk {chunk}"
+    nc = s // chunk
+    rep = h // g
+    Bh = jnp.repeat(B, rep, axis=2) if rep > 1 else B      # (b,s,h,n)
+    Ch = jnp.repeat(C, rep, axis=2) if rep > 1 else C
+
+    f32 = jnp.float32
+    xc = x.reshape(b, nc, chunk, h, p).astype(f32)
+    dtc = dt.reshape(b, nc, chunk, h).astype(f32)
+    Bc = Bh.reshape(b, nc, chunk, h, n).astype(f32)
+    Cc = Ch.reshape(b, nc, chunk, h, n).astype(f32)
+    dA = dtc * A.astype(f32)                                 # (b,c,l,h)
+    dA = jnp.moveaxis(dA, -1, -2)                            # (b,c,h,l)
+    dA_cum = jnp.cumsum(dA, axis=-1)                         # (b,c,h,l)
+
+    # 1. within-chunk (the "quadratic attention-like" part)
+    Ldec = jnp.exp(_segsum(dA))                              # (b,c,h,l,l)
+    cb = jnp.einsum("bclhn,bcshn->bchls", Cc, Bc)
+    dtx = dtc[..., None] * xc                                # (b,c,l,h,p)
+    y_diag = jnp.einsum("bchls,bcshp->bclhp", cb * Ldec, dtx)
+
+    # 2. chunk-final states
+    decay_states = jnp.exp(dA_cum[..., -1:] - dA_cum)        # (b,c,h,l)
+    states = jnp.einsum("bclhn,bchl,bclhp->bchpn", Bc, decay_states, dtx)
+
+    # 3. cross-chunk recurrence (associative; lax.scan over chunks)
+    chunk_decay = jnp.exp(dA_cum[..., -1])                   # (b,c,h)
+    s0 = (jnp.zeros((b, h, p, n), f32) if init_state is None
+          else init_state.astype(f32))
+
+    def step(carry, inp):
+        st_in, dec = inp                                      # (b,h,p,n),(b,h)
+        new = carry * dec[..., None, None] + st_in
+        return new, carry                                     # emit state *before* chunk
+
+    final, prev_states = jax.lax.scan(
+        step, s0, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)             # (b,c,h,p,n)
+
+    # 4. state -> output within chunk
+    state_decay = jnp.exp(dA_cum)                             # (b,c,h,l)
+    y_off = jnp.einsum("bclhn,bchpn,bchl->bclhp", Cc, prev_states,
+                       state_decay)
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y.astype(x.dtype), final
+
+
+def ssd_sequential_ref(x, dt, A, B, C,
+                       init_state=None) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Token-by-token recurrence (the gold model the chunked scan must
+    match): h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t ; y_t = C_t h_t."""
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    Bh = jnp.repeat(B, rep, axis=2) if rep > 1 else B
+    Ch = jnp.repeat(C, rep, axis=2) if rep > 1 else C
+    f32 = jnp.float32
+    s0 = (jnp.zeros((b, h, p, n), f32) if init_state is None
+          else init_state.astype(f32))
+
+    def step(carry, inp):
+        xt, dtt, Bt, Ct = inp
+        dec = jnp.exp(dtt * A.astype(f32))                    # (b,h)
+        upd = jnp.einsum("bhn,bhp,bh->bhpn", Bt.astype(f32),
+                         xt.astype(f32), dtt.astype(f32))
+        new = carry * dec[..., None, None] + upd
+        yt = jnp.einsum("bhn,bhpn->bhp", Ct.astype(f32), new)
+        return new, yt
+
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(Bh, 1, 0), jnp.moveaxis(Ch, 1, 0))
+    final, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), final

@@ -1,0 +1,132 @@
+"""Mamba2 SSD (state-space duality) chunked-scan Pallas kernel.
+
+The SSD computation is itself a dataflow pipeline over *chunks*:
+
+    read chunk -> within-chunk "attention" (quadratic in L, cheap)
+               -> chunk-final state contribution
+               -> cross-chunk recurrence  (the FIFO-carried state)
+               -> state-to-output correction -> write chunk
+
+The cross-chunk state (P, N per head) is exactly a FLOWER channel: it
+lives in VMEM scratch and is carried across the sequential chunk grid
+dimension, so the O(S·N·P) recurrent state never touches HBM.
+
+Inputs are pre-scaled outside the kernel (xd = x*dt, dA = dt*A) so the
+kernel body is pure matmul + decay algebra and stays free of captured
+constants.
+
+Grid: ``(B*H, S/L)`` with the chunk dimension sequential.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["ssd_scan"]
+
+
+def _kernel(xd_ref, da_ref, b_ref, c_ref, y_ref, fs_ref, state_ref,
+            *, L: int):
+    ci = pl.program_id(1)
+    nc = pl.num_programs(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    xd = xd_ref[0].astype(jnp.float32)        # (L, P)  x*dt
+    da = da_ref[0].astype(jnp.float32)        # (1, L)  dt*A  (row vector)
+    B = b_ref[0].astype(jnp.float32)          # (L, N)
+    C = c_ref[0].astype(jnp.float32)          # (L, N)
+
+    cs = jnp.cumsum(da, axis=-1)              # (1, L)
+    # segsum: sum_{k=j+1..i} da_k  = cs[i] - cs[j]; lower-triangular
+    diff = cs.reshape(L, 1) - cs.reshape(1, L)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    ldec = jnp.where(ii >= jj, jnp.exp(diff), 0.0)          # (L, L)
+
+    cb = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (L, L)
+    y = jax.lax.dot_general(cb * ldec, xd, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # (L, P)
+
+    # contribution of the carried state: y += (C * exp(cs)) @ state^T
+    decay_in = jnp.exp(cs).reshape(L, 1)                     # (L, 1)
+    y = y + jax.lax.dot_general(
+        C * decay_in, state_ref[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)                  # (L, P)
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    # state update: state = state * exp(cs[-1]) + (xd * decay_out)^T @ B
+    total = jnp.exp(cs[0, L - 1])
+    decay_out = jnp.exp(cs[0, L - 1] - cs).reshape(L, 1)     # (L, 1)
+    contrib = jax.lax.dot_general(
+        xd * decay_out, B, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                  # (P, N)
+    state_ref[...] = state_ref[...] * total + contrib
+
+    @pl.when(ci == nc - 1)
+    def _done():
+        fs_ref[0] = state_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+             B: jnp.ndarray, C: jnp.ndarray, chunk: int = 64,
+             interpret: bool = True) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Same contract as :func:`repro.kernels.ref.ssd_scan_ref`.
+
+    x: (b, s, h, p); dt: (b, s, h); A: (h,); B, C: (b, s, g, n).
+    Returns (y (b, s, h, p), final_state (b, h, p, n)).
+    """
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    assert s % chunk == 0, f"seq {s} % chunk {chunk} != 0"
+    L = chunk
+
+    # pre-scale outside the kernel (keeps the body constant-free)
+    xd = (x.astype(jnp.float32) * dt.astype(jnp.float32)[..., None])
+    da = dt.astype(jnp.float32) * A.astype(jnp.float32)      # (b, s, h)
+
+    # flatten (b, h) -> rows; group-broadcast B/C via the index map
+    xdf = jnp.moveaxis(xd, 2, 1).reshape(b * h, s, p)
+    daf = jnp.moveaxis(da, 2, 1).reshape(b * h, 1, s)
+    Bf = jnp.moveaxis(B, 2, 1).reshape(b * g, s, n)
+    Cf = jnp.moveaxis(C, 2, 1).reshape(b * g, s, n)
+
+    def bc_idx(bh, ci, *, h=h, g=g, rep=rep):
+        return ((bh // h) * g + (bh % h) // rep, ci, 0)
+
+    y, fs = pl.pallas_call(
+        functools.partial(_kernel, L=L),
+        grid=(b * h, s // L),
+        in_specs=[
+            pl.BlockSpec((1, L, p), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, 1, L), lambda bh, ci: (bh, 0, ci)),
+            pl.BlockSpec((1, L, n), bc_idx),
+            pl.BlockSpec((1, L, n), bc_idx),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, L, p), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, p, n), lambda bh, ci: (bh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b * h, s, p), x.dtype),
+            jax.ShapeDtypeStruct((b * h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(xdf, daf, Bf, Cf)
+
+    y = jnp.moveaxis(y.reshape(b, h, s, p), 1, 2)
+    return y, fs.reshape(b, h, p, n)
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m

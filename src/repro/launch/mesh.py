@@ -1,0 +1,28 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so
+importing this module never touches jax device state — the dry-run
+must set XLA_FLAGS before the first jax call, and smoke tests must see
+the real single device.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_local_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips).
+
+    Axes: ``pod`` (DP across pods, slower ICI/DCN), ``data`` (DP/FSDP),
+    ``model`` (TP/EP/SP).
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many local devices exist (tests)."""
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,698 @@
+"""Model building blocks: declarative params, attention (GQA/MQA/MLA),
+SwiGLU MLP, MoE, Mamba2 — all functional, all shardable.
+
+Parameters are declared with :class:`ParamDef` (shape + logical axes +
+init law); ``init_tree``/``axes_tree`` derive the value tree and the
+logical-sharding tree from the *same* declaration, so parameter and
+sharding structure cannot drift apart.  Logical axes are mapped to mesh
+axes by :mod:`repro.parallel.sharding`.
+
+Activation sharding uses :func:`shard_act`, which consults a context
+set by the launcher (no-op outside a mesh) — the model code itself
+stays mesh-agnostic, the FLOWER "single source" rule at cluster scale.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+from repro.models.config import ModelConfig
+
+__all__ = [
+    "ParamDef", "init_tree", "axes_tree", "shard_act", "activation_rules",
+    "rmsnorm", "rope", "embed_tokens", "unembed", "attention_block",
+    "mlp_block", "moe_block", "mamba2_block", "attention_xla",
+    "decode_attn_cache", "mamba2_decode_step", "softmax_cross_entropy",
+]
+
+# ----------------------------------------------------------------------
+# declarative parameters
+# ----------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    init: str = "normal"        # normal | zeros | ones | ssm_a | dt_bias
+    scale: float | None = None  # stddev override (default: 1/sqrt(fan_in))
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def init_tree(defs: Any, rng: jax.Array, dtype: Any) -> Any:
+    leaves, treedef = jax.tree.flatten(
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    keys = jax.random.split(rng, len(leaves))
+    vals = [_init_one(d, k, dtype) for d, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def axes_tree(defs: Any) -> Any:
+    return jax.tree.map(lambda d: d.axes, defs,
+                        is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def _init_one(d: ParamDef, key: jax.Array, dtype: Any) -> jnp.ndarray:
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, dtype)
+    if d.init == "ssm_a":     # A = -uniform[1, 16)  (mamba2 init)
+        u = jax.random.uniform(key, d.shape, jnp.float32, 1.0, 16.0)
+        return (-u).astype(jnp.float32)           # A kept in f32
+    if d.init == "dt_bias":   # softplus^-1(uniform[1e-3, 1e-1])
+        u = jax.random.uniform(key, d.shape, jnp.float32, 1e-3, 1e-1)
+        return jnp.log(jnp.expm1(u)).astype(jnp.float32)
+    fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+    std = d.scale if d.scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, d.shape, jnp.float32) * std).astype(dtype)
+
+
+# ----------------------------------------------------------------------
+# activation sharding hook
+# ----------------------------------------------------------------------
+_ACT_RULES = threading.local()
+
+
+@contextlib.contextmanager
+def activation_rules(rules: Callable[[jnp.ndarray, tuple], jnp.ndarray]):
+    """Launcher installs a fn(x, logical_axes) -> x (sharding constraint)."""
+    prev = getattr(_ACT_RULES, "fn", None)
+    _ACT_RULES.fn = rules
+    try:
+        yield
+    finally:
+        _ACT_RULES.fn = prev
+
+
+def shard_act(x: jnp.ndarray, axes: tuple[str | None, ...]) -> jnp.ndarray:
+    fn = getattr(_ACT_RULES, "fn", None)
+    return fn(x, axes) if fn is not None else x
+
+
+# ----------------------------------------------------------------------
+# primitives
+# ----------------------------------------------------------------------
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float) -> jnp.ndarray:
+    return ops.rmsnorm(x, w, eps)
+
+
+def rope(x: jnp.ndarray, pos: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, D) or (..., H, D) with matching pos (..., S)/scalar."""
+    D = x.shape[-1]
+    half = D // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = pos[..., None].astype(jnp.float32) * freqs      # (..., S, half)
+    ang = ang[..., None, :]                               # broadcast heads
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def embed_tokens(emb: jnp.ndarray, tokens: jnp.ndarray) -> jnp.ndarray:
+    return shard_act(emb[tokens], ("batch", "seq", None))
+
+
+def unembed(x: jnp.ndarray, head: jnp.ndarray) -> jnp.ndarray:
+    logits = jnp.einsum("...d,dv->...v", x.astype(jnp.float32),
+                        head.astype(jnp.float32))
+    return shard_act(logits, ("batch", "seq", "vocab"))
+
+
+def softmax_cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray
+                          ) -> jnp.ndarray:
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return lse - gold
+
+
+# ----------------------------------------------------------------------
+# attention (XLA streaming form == the dataflow transformation in HLO)
+# ----------------------------------------------------------------------
+def attention_xla(q, k, v, bias=None, causal=True, chunk: int = 0,
+                  impl: str = "auto", scale: float | None = None,
+                  unroll: bool = False):
+    """Dispatch: Pallas flash kernel, chunked-scan XLA (same dataflow,
+    lowerable on any backend), or naive reference."""
+    Sk = k.shape[2]
+    if impl == "pallas":
+        return ops.attention(q, k, v, bias=bias, causal=causal,
+                             impl="pallas", scale=scale)
+    if chunk and Sk > chunk:
+        return _chunked_attention(q, k, v, bias, causal, chunk, scale,
+                                  unroll)
+    from repro.kernels.ref import flash_attention_ref
+    return flash_attention_ref(q, k, v, bias=bias, causal=causal,
+                               scale=scale)
+
+
+def _chunked_attention(q, k, v, bias, causal, chunk, scale=None,
+                       unroll=False):
+    """Online-softmax scan over KV blocks — the flash dataflow in pure
+    lax (one KV block in "VMEM" per step; (Sq,Sk) never materializes)."""
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    Dv = v.shape[-1]
+    G = Hq // Hkv
+    offs = Sk - Sq  # query positions sit at the end of the kv stream
+    pad = (-Sk) % chunk
+    if pad:         # ragged KV (e.g. whisper's 1500 frames): mask pads
+        if bias is None:
+            bias = jnp.zeros((B, Sk), jnp.float32)
+        bias = jnp.pad(bias.astype(jnp.float32), ((0, 0), (0, pad)),
+                       constant_values=-1e30)
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        Sk += pad
+    nk = Sk // chunk
+    scale = scale if scale is not None else 1.0 / np.sqrt(D)
+    qf = q.astype(jnp.float32) * scale
+
+    kc = jnp.moveaxis(k.reshape(B, Hkv, nk, chunk, D), 2, 0)
+    vc = jnp.moveaxis(v.reshape(B, Hkv, nk, chunk, Dv), 2, 0)
+    bc = (jnp.moveaxis(bias.reshape(B, nk, chunk), 1, 0)
+          if bias is not None else jnp.zeros((nk, B, chunk), jnp.float32))
+
+    def step(carry, inp):
+        m, l, acc = carry
+        kb, vb, bb, ki = inp
+        kb = jnp.repeat(kb, G, axis=1) if G > 1 else kb
+        vb = jnp.repeat(vb, G, axis=1) if G > 1 else vb
+        logits = jnp.einsum("bhqd,bhkd->bhqk", qf, kb.astype(jnp.float32))
+        logits += bb[:, None, None, :].astype(jnp.float32)
+        if causal:
+            qpos = jnp.arange(Sq)[:, None] + offs
+            kpos = ki * chunk + jnp.arange(chunk)[None, :]
+            logits = jnp.where(kpos <= qpos, logits, -1e30)
+        m_new = jnp.maximum(m, logits.max(-1))
+        p = jnp.exp(logits - m_new[..., None])
+        p = jnp.where(m_new[..., None] > -5e29, p, 0.0)
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhqk,bhkd->bhqd", p, vb.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Hq, Sq), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, Hq, Sq), jnp.float32)
+    a0 = jnp.zeros((B, Hq, Sq, Dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0), (kc, vc, bc, jnp.arange(nk)),
+        unroll=nk if unroll else 1)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype)
+
+
+# ----------------------------------------------------------------------
+# attention block (GQA / MQA; bias optional; KV cache aware)
+# ----------------------------------------------------------------------
+def attn_defs(cfg: ModelConfig, d_in: int | None = None) -> dict:
+    d = d_in or cfg.d_model
+    hd, Hq, Hkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    defs = {
+        "ln": ParamDef((d,), ("embed",), "ones"),
+        "wq": ParamDef((d, Hq * hd), ("embed", "heads")),
+        "wk": ParamDef((d, Hkv * hd), ("embed", "kv_heads")),
+        "wv": ParamDef((d, Hkv * hd), ("embed", "kv_heads")),
+        "wo": ParamDef((Hq * hd, d), ("heads", "embed")),
+    }
+    if cfg.qkv_bias:
+        defs["bq"] = ParamDef((Hq * hd,), ("heads",), "zeros")
+        defs["bk"] = ParamDef((Hkv * hd,), ("kv_heads",), "zeros")
+        defs["bv"] = ParamDef((Hkv * hd,), ("kv_heads",), "zeros")
+    return defs
+
+
+def mla_defs(cfg: ModelConfig) -> dict:
+    d, hd, Hq = cfg.d_model, cfg.hd, cfg.n_heads
+    r, qr, kr = cfg.kv_lora_rank, cfg.q_lora_rank or cfg.d_model, cfg.rope_head_dim
+    return {
+        "ln": ParamDef((d,), ("embed",), "ones"),
+        "wdq": ParamDef((d, qr), ("embed", None)),
+        "q_ln": ParamDef((qr,), (None,), "ones"),
+        "wuq": ParamDef((qr, Hq * (hd + kr)), (None, "heads")),
+        "wdkv": ParamDef((d, r + kr), ("embed", None)),
+        "kv_ln": ParamDef((r,), (None,), "ones"),
+        "wuk": ParamDef((r, Hq * hd), (None, "heads")),
+        "wuv": ParamDef((r, Hq * hd), (None, "heads")),
+        "wo": ParamDef((Hq * hd, d), ("heads", "embed")),
+    }
+
+
+def attention_block(p: dict, cfg: ModelConfig, x: jnp.ndarray,
+                    pos: jnp.ndarray, cache: dict | None = None,
+                    cache_index: jnp.ndarray | None = None,
+                    cross_kv: tuple | None = None,
+                    causal: bool = True) -> tuple[jnp.ndarray, dict | None]:
+    """Pre-norm attention with residual.  x: (B, S, d).
+
+    cache: {"k","v"} (B, Hkv, S_max, D) — updated at ``cache_index``
+    when decoding (S == 1) or filled at prefill.
+    cross_kv: (k, v) from the encoder (whisper cross-attention).
+    Returns (x + attn_out, new_cache).
+    """
+    B, S, d = x.shape
+    hd, Hq, Hkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    h = rmsnorm(x, p["ln"], cfg.norm_eps)
+
+    q = h @ p["wq"]
+    if "bq" in p:
+        q = q + p["bq"]
+    q = q.reshape(B, S, Hq, hd)
+    q = rope(q, pos, cfg.rope_theta)
+    q = shard_act(q, ("batch", "seq", "heads", None))
+
+    if cross_kv is not None:
+        k, v = cross_kv                       # (B, Hkv, Senc, D) pre-computed
+    else:
+        k = h @ p["wk"]
+        v = h @ p["wv"]
+        if "bk" in p:
+            k, v = k + p["bk"], v + p["bv"]
+        k = rope(k.reshape(B, S, Hkv, hd), pos, cfg.rope_theta)
+        v = v.reshape(B, S, Hkv, hd)
+        k = jnp.moveaxis(k, 1, 2)             # (B, Hkv, S, D)
+        v = jnp.moveaxis(v, 1, 2)
+        if cfg.kv_repeat_to > Hkv and cache is not None:
+            # replicate KV heads up to the TP width: the cache argument
+            # then shards evenly on its head dim and decode-time cache
+            # updates stay local (GQA math is unchanged — each copy
+            # serves Hq/kv_repeat_to query heads).
+            rep = cfg.kv_repeat_to // Hkv
+            k = jnp.repeat(k, rep, axis=1)
+            v = jnp.repeat(v, rep, axis=1)
+            Hkv = cfg.kv_repeat_to
+        k = shard_act(k, ("batch", "kv_heads", "seq", None))
+        v = shard_act(v, ("batch", "kv_heads", "seq", None))
+
+    new_cache = cache
+    if cache is not None and cross_kv is None:
+        ck, cv = cache["k"], cache["v"]
+        if getattr(cache_index, "ndim", 0) == 1:
+            # per-slot positions (continuous batching): each sequence
+            # writes its new KV at its own length.
+            upd = jax.vmap(lambda c, x, i: jax.lax.dynamic_update_slice(
+                c, x.astype(c.dtype), (0, i, 0)))
+            ck = upd(ck, k, cache_index)
+            cv = upd(cv, v, cache_index)
+        else:
+            ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                              (0, 0, cache_index, 0))
+            cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                              (0, 0, cache_index, 0))
+        new_cache = {"k": ck, "v": cv}
+        if S == 1:                 # decode attends against the cache;
+            k, v = ck, cv          # prefill attends against the fresh
+                                   # projections (queries start at 0)
+
+    qh = jnp.moveaxis(q, 1, 2)                # (B, Hq, S, D)
+    if S == 1:
+        Smax = k.shape[2]
+        if cross_kv is not None:              # decode x encoder output:
+            bias = None                       # every slot is valid
+        else:
+            idxb = (cache_index[:, None]
+                    if getattr(cache_index, "ndim", 0) == 1
+                    else cache_index)
+            bias = jnp.where(jnp.arange(Smax)[None, :] <= idxb, 0.0,
+                             -1e30).astype(jnp.float32)
+            bias = jnp.broadcast_to(bias, (B, Smax))
+        out = ops.decode_attention(qh[:, :, 0], k, v, bias=bias,
+                                   impl=cfg.attn_impl)      # (B, Hq, D)
+        out = out.reshape(B, 1, Hq * hd)
+    else:
+        out = attention_xla(qh, k, v, bias=None, causal=causal,
+                            chunk=cfg.attn_chunk, impl=cfg.attn_impl,
+                            unroll=cfg.attn_unroll)
+        out = jnp.moveaxis(out, 1, 2).reshape(B, S, Hq * hd)
+    out = shard_act(out, ("batch", "seq", "heads"))
+    return x + (out @ p["wo"]).astype(x.dtype), new_cache
+
+
+def mla_attention_block(p: dict, cfg: ModelConfig, x: jnp.ndarray,
+                        pos: jnp.ndarray, cache: dict | None = None,
+                        cache_index: jnp.ndarray | None = None
+                        ) -> tuple[jnp.ndarray, dict | None]:
+    """Multi-head Latent Attention (MiniCPM3 / DeepSeek-style), absorbed.
+
+    The absorbed form turns MLA into **MQA over the latent cache**: per
+    head, q_eff = [W_uk^T q_nope ; q_rope]  (dim r + kr) attends against
+    the single shared k_eff = [c_kv ; k_rope], and the per-head value is
+    the latent c_kv itself (dim r), up-projected once after attention.
+    The KV cache stores r + kr floats per token instead of 2*Hq*hd —
+    FLOWER's burst/bundle insight applied to cache traffic — and the
+    streaming attention path (chunked scan / flash kernel) applies
+    unchanged with Hkv=1, Dk=r+kr, Dv=r.
+    """
+    B, S, d = x.shape
+    hd, Hq = cfg.hd, cfg.n_heads
+    r, kr = cfg.kv_lora_rank, cfg.rope_head_dim
+    h = rmsnorm(x, p["ln"], cfg.norm_eps)
+
+    cq = rmsnorm(h @ p["wdq"], p["q_ln"], cfg.norm_eps)
+    q = (cq @ p["wuq"]).reshape(B, S, Hq, hd + kr)
+    q_nope, q_rope = q[..., :hd], q[..., hd:]
+    q_rope = rope(q_rope, pos, cfg.rope_theta)
+
+    dkv = h @ p["wdkv"]                        # (B, S, r + kr)
+    c_kv = rmsnorm(dkv[..., :r], p["kv_ln"], cfg.norm_eps)
+    k_rope = rope(dkv[..., None, r:], pos, cfg.rope_theta)[:, :, 0]
+
+    new_cache = cache
+    if cache is not None:
+        cc, cr = cache["c_kv"], cache["k_rope"]
+        if getattr(cache_index, "ndim", 0) == 1:
+            upd = jax.vmap(lambda c, x, i: jax.lax.dynamic_update_slice(
+                c, x.astype(c.dtype), (i, 0)))
+            cc = upd(cc, c_kv, cache_index)
+            cr = upd(cr, k_rope, cache_index)
+        else:
+            cc = jax.lax.dynamic_update_slice(cc, c_kv.astype(cc.dtype),
+                                              (0, cache_index, 0))
+            cr = jax.lax.dynamic_update_slice(cr, k_rope.astype(cr.dtype),
+                                              (0, cache_index, 0))
+        new_cache = {"c_kv": cc, "k_rope": cr}
+        if S == 1:
+            c_kv, k_rope = cc, cr
+
+    wuk = p["wuk"].reshape(r, Hq, hd)
+    wuv = p["wuv"].reshape(r, Hq, hd)
+    scale = 1.0 / np.sqrt(hd + kr)
+    absorb = cfg.mla_absorb == "always" or S == 1
+
+    if absorb:
+        # absorbed: q projected into latent space; MQA over the latent
+        # cache.  Optimal at decode (no K/V up-projection per step) but
+        # inflates prefill logits flops (contraction over r+kr=288
+        # instead of hd+kr=96) — see §Perf.
+        q_lat = jnp.einsum("bshd,rhd->bshr", q_nope.astype(jnp.float32),
+                           wuk.astype(jnp.float32)).astype(x.dtype)
+        q_eff = jnp.concatenate([q_lat, q_rope], -1)       # (B,S,Hq,r+kr)
+        q_eff = jnp.moveaxis(q_eff, 1, 2)
+        k_eff = jnp.concatenate([c_kv, k_rope], -1)[:, None]
+        v_eff = c_kv[:, None]                              # (B,1,Sk,r)
+        if S == 1:
+            Sk = k_eff.shape[2]
+            idxb = (cache_index[:, None]
+                    if getattr(cache_index, "ndim", 0) == 1
+                    else cache_index)
+            bias = jnp.where(jnp.arange(Sk)[None, :] <= idxb, 0.0,
+                             -1e30).astype(jnp.float32)
+            bias = jnp.broadcast_to(bias, (B, Sk))
+            ctx = ops.decode_attention(q_eff[:, :, 0], k_eff, v_eff,
+                                       bias=bias, scale=scale,
+                                       impl=cfg.attn_impl)
+            ctx = ctx[:, None]                             # (B,1,Hq,r)
+        else:
+            ctx = attention_xla(q_eff, k_eff, v_eff, causal=True,
+                                chunk=cfg.attn_chunk, impl=cfg.attn_impl,
+                                scale=scale, unroll=cfg.attn_unroll)
+            ctx = jnp.moveaxis(ctx, 1, 2)                  # (B,S,Hq,r)
+        out = jnp.einsum("bshr,rhd->bshd", ctx.astype(jnp.float32),
+                         wuv.astype(jnp.float32))
+    else:
+        # non-absorbed (train/prefill): up-project K/V once, then
+        # standard GQA-style attention with per-head dim hd+kr — 3.4x
+        # fewer logits flops than the absorbed form at minicpm3 ranks.
+        k_nope = jnp.einsum("btr,rhd->bthd", c_kv.astype(jnp.float32),
+                            wuk.astype(jnp.float32)).astype(x.dtype)
+        v = jnp.einsum("btr,rhd->bthd", c_kv.astype(jnp.float32),
+                       wuv.astype(jnp.float32)).astype(x.dtype)
+        Sk = c_kv.shape[1]
+        k_rope_h = jnp.broadcast_to(k_rope[:, :, None],
+                                    (B, Sk, Hq, kr)).astype(x.dtype)
+        k_full = jnp.concatenate([k_nope, k_rope_h], -1)   # (B,Sk,Hq,hd+kr)
+        q_full = jnp.concatenate([q_nope.astype(x.dtype), q_rope], -1)
+        q_full = jnp.moveaxis(q_full, 1, 2)
+        k_full = jnp.moveaxis(k_full, 1, 2)
+        v = jnp.moveaxis(v, 1, 2)                          # (B,Hq,Sk,hd)
+        ctx = attention_xla(q_full, k_full, v, causal=True,
+                            chunk=cfg.attn_chunk, impl=cfg.attn_impl,
+                            scale=scale, unroll=cfg.attn_unroll)
+        ctx = jnp.moveaxis(ctx, 1, 2)                      # (B,S,Hq,hd)
+        out = ctx.astype(jnp.float32)
+
+    out = out.reshape(B, S, Hq * hd).astype(x.dtype)
+    out = shard_act(out, ("batch", "seq", "heads"))
+    return x + out @ p["wo"], new_cache
+
+
+# ----------------------------------------------------------------------
+# MLP / MoE
+# ----------------------------------------------------------------------
+def mlp_defs(cfg: ModelConfig, d: int | None = None, ff: int | None = None
+             ) -> dict:
+    d = d or cfg.d_model
+    ff = ff or cfg.d_ff
+    return {
+        "ln": ParamDef((d,), ("embed",), "ones"),
+        "wg": ParamDef((d, ff), ("embed", "ff")),
+        "wu": ParamDef((d, ff), ("embed", "ff")),
+        "wd": ParamDef((ff, d), ("ff", "embed")),
+    }
+
+
+def mlp_block(p: dict, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    lead = x.shape
+    y = ops.mlp(x, p["ln"], p["wg"], p["wu"], p["wd"], eps=cfg.norm_eps,
+                impl=cfg.attn_impl)
+    return x + shard_act(y.reshape(lead), ("batch", "seq", None))
+
+
+def moe_defs(cfg: ModelConfig) -> dict:
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    return {
+        "ln": ParamDef((d,), ("embed",), "ones"),
+        "router": ParamDef((d, E), ("embed", None), scale=0.02),
+        "wg": ParamDef((E, d, ff), ("experts", "embed", "expert_ff")),
+        "wu": ParamDef((E, d, ff), ("experts", "embed", "expert_ff")),
+        "wd": ParamDef((E, ff, d), ("experts", "expert_ff", "embed")),
+    }
+
+
+def moe_block(p: dict, cfg: ModelConfig, x: jnp.ndarray
+              ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Top-k MoE with batch-grouped capacity dispatch.
+
+    Dispatch is scatter/gather (no (T,E,C) one-hot einsum) and is
+    *grouped by batch row*: capacity and ranks are computed per
+    sequence, so the dispatch bookkeeping (one-hot cumsum) never
+    crosses data shards — tokens stay data-local until the expert
+    contraction, whose (group, expert, cap, d) operand is sharded
+    batch-over-data x experts-over-model; the expert exchange is the
+    only cross-shard hop (XLA lowers it to the MoE all-to-all).
+    Overflow beyond capacity is dropped (combine weight zero; the
+    residual carries the token) — standard Switch/GShard semantics.
+
+    Returns (x + moe_out, aux_loss).
+    """
+    B, S, d = x.shape
+    E, K = cfg.n_experts, cfg.experts_per_token
+    # dispatch groups: per batch row by default (tokens stay
+    # data-local); a single global group when S is tiny (decode), so
+    # capacity padding doesn't dwarf the active tokens.
+    G = cfg.moe_groups or B
+    T = (B * S) // G                                     # tokens / group
+    cap = int(np.ceil(T * K / E * cfg.capacity_factor))
+    cap = max(cap, K)
+
+    h = rmsnorm(x, p["ln"], cfg.norm_eps)                # (B, S, d)
+    gates = jax.nn.softmax(
+        jnp.einsum("bsd,de->bse", h.astype(jnp.float32),
+                   p["router"].astype(jnp.float32)), axis=-1)
+    topw, tope = jax.lax.top_k(gates, K)                 # (B, S, K)
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+    h = h.reshape(G, T, d)
+    tope_g = tope.reshape(G, T, K)
+
+    def dispatch_row(h_row, e_row, w_row):
+        """h_row: (T, d); e_row/w_row: (T, K).
+
+        Scatter only int32 slot->token INDICES (E*cap*4 bytes — tiny),
+        then move the d-wide vectors with a gather; the reverse path
+        scatter-adds expert outputs into a token-ordered buffer.  Under
+        experts-over-model sharding this lowers to the bandwidth-
+        optimal MoE all-to-all of (T, d) activations instead of an
+        all-reduce of the whole (E, cap, d) capacity buffer (21 GB vs
+        0.5 GB per layer per device on qwen3 — see §Perf cell 1).
+        """
+        flat_e = e_row.reshape(-1)                       # (T*K,)
+        onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)
+        pos_in_e = jnp.cumsum(onehot, axis=0) - onehot   # exclusive rank
+        pos = jnp.take_along_axis(pos_in_e, flat_e[:, None], 1)[:, 0]
+        keep = pos < cap
+        slot = jnp.where(keep, pos, cap - 1)
+        tok = jnp.arange(T * K, dtype=jnp.int32) // K
+        # (E, cap) int32 map: which token feeds each expert slot (T = none)
+        idx = jnp.full((E, cap), T, jnp.int32)
+        idx = idx.at[flat_e, slot].set(jnp.where(keep, tok, T))
+        wslot = jnp.zeros((E, cap), jnp.float32)
+        wslot = wslot.at[flat_e, slot].add(
+            jnp.where(keep, w_row.reshape(-1), 0.0))
+        h_pad = jnp.concatenate([h_row, jnp.zeros((1, d), h_row.dtype)], 0)
+        buf = h_pad[idx]                                  # (E, cap, d)
+        return buf, idx, wslot
+
+    buf, idx, wslot = jax.vmap(dispatch_row)(
+        h, tope_g, topw.astype(jnp.float32).reshape(G, T, K))
+    buf = shard_act(buf, ("batch", "experts", None, None))
+
+    # expert FFN (batched over E; experts sharded over the model axis).
+    # MXU semantics: bf16 operands, f32 accumulation — halves the
+    # weight/activation read traffic vs f32-upcast einsums.
+    g = jnp.einsum("becd,edf->becf", buf, p["wg"],
+                   preferred_element_type=jnp.float32)
+    u = jnp.einsum("becd,edf->becf", buf, p["wu"],
+                   preferred_element_type=jnp.float32)
+    a = (jax.nn.silu(g) * u).astype(x.dtype)
+    y = jnp.einsum("becf,efd->becd", a, p["wd"],
+                   preferred_element_type=jnp.float32)
+    y = shard_act(y.astype(x.dtype), ("batch", "experts", None, None))
+
+    def combine_row(y_row, idx, wslot):
+        y_scaled = y_row * wslot[..., None].astype(y_row.dtype)
+        out = jnp.zeros((T + 1, d), y_row.dtype)
+        out = out.at[idx.reshape(-1)].add(y_scaled.reshape(E * cap, d))
+        return out[:T]
+
+    out = jax.vmap(combine_row)(y, idx, wslot)
+    out = out.reshape(B, S, d)
+
+    # load-balance auxiliary loss (Switch):  E * sum_e f_e * P_e
+    me = gates.mean((0, 1))                              # (E,)
+    ce = jax.nn.one_hot(tope[..., 0], E, dtype=jnp.float32).mean((0, 1))
+    aux = E * jnp.sum(me * ce)
+    return x + out, aux
+
+
+# ----------------------------------------------------------------------
+# Mamba2 (SSD) block
+# ----------------------------------------------------------------------
+def mamba2_defs(cfg: ModelConfig) -> dict:
+    d, di = cfg.d_model, cfg.d_inner
+    g, n, H = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    conv_ch = di + 2 * g * n
+    return {
+        "ln": ParamDef((d,), ("embed",), "ones"),
+        "in_proj": ParamDef((d, 2 * di + 2 * g * n + H), ("embed", "ssm_inner")),
+        "conv_w": ParamDef((cfg.conv_width, conv_ch), (None, "ssm_inner"),
+                           scale=0.5),
+        "conv_b": ParamDef((conv_ch,), ("ssm_inner",), "zeros"),
+        "A": ParamDef((H,), (None,), "ssm_a"),
+        "D": ParamDef((H,), (None,), "ones"),
+        "dt_bias": ParamDef((H,), (None,), "dt_bias"),
+        "out_ln": ParamDef((di,), ("ssm_inner",), "ones"),
+        "out_proj": ParamDef((di, d), ("ssm_inner", "embed")),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 state: jnp.ndarray | None = None
+                 ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv via shifted adds.  x: (B, S, C); w: (W, C).
+
+    state: (B, W-1, C) trailing context from the previous segment.
+    Returns (y, new_state)."""
+    W = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], W - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)             # (B, S+W-1, C)
+    S = x.shape[1]
+    y = b
+    for i in range(W):
+        y = y + xp[:, i:i + S] * w[i]
+    new_state = xp[:, -(W - 1):] if W > 1 else state
+    return y, new_state
+
+
+def mamba2_block(p: dict, cfg: ModelConfig, x: jnp.ndarray,
+                 conv_state: jnp.ndarray | None = None,
+                 ssm_state: jnp.ndarray | None = None,
+                 return_state: bool = False):
+    """Mamba2 block (SSD).  x: (B, S, d) -> (B, S, d)."""
+    B, S, d = x.shape
+    di, g, n, H, P = (cfg.d_inner, cfg.ssm_groups, cfg.ssm_state,
+                      cfg.ssm_heads, cfg.ssm_head_dim)
+    h = rmsnorm(x, p["ln"], cfg.norm_eps)
+    zxbcdt = h @ p["in_proj"]
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * g * n]
+    dt_raw = zxbcdt[..., -H:]
+
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xbc = jax.nn.silu(xbc)
+    xs = xbc[..., :di].reshape(B, S, H, P)
+    Bm = xbc[..., di:di + g * n].reshape(B, S, g, n)
+    Cm = xbc[..., di + g * n:].reshape(B, S, g, n)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+
+    y, final_state = ops.ssd(xs, dt, p["A"], Bm, Cm, chunk=cfg.ssm_chunk,
+                             impl=cfg.attn_impl,
+                             init_state=ssm_state)
+    y = y + xs * p["D"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(B, S, di)
+    y = rmsnorm(y * jax.nn.silu(z), p["out_ln"], cfg.norm_eps)
+    out = x + y @ p["out_proj"]
+    if return_state:
+        return out, new_conv, final_state
+    return out
+
+
+def mamba2_decode_step(p: dict, cfg: ModelConfig, x: jnp.ndarray,
+                       conv_state: jnp.ndarray, ssm_state: jnp.ndarray):
+    """Single-token recurrent step.  x: (B, 1, d); states carried.
+
+    conv_state: (B, W-1, conv_ch); ssm_state: (B, H, P, N) f32."""
+    B, _, d = x.shape
+    di, g, n, H, P = (cfg.d_inner, cfg.ssm_groups, cfg.ssm_state,
+                      cfg.ssm_heads, cfg.ssm_head_dim)
+    h = rmsnorm(x, p["ln"], cfg.norm_eps)
+    zxbcdt = h @ p["in_proj"]
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * g * n]
+    dt_raw = zxbcdt[..., -H:]
+
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xbc = jax.nn.silu(xbc)
+    xs = xbc[..., :di].reshape(B, H, P)
+    Bm = xbc[..., di:di + g * n].reshape(B, g, n)
+    Cm = xbc[..., di + g * n:].reshape(B, g, n)
+    rep = H // g
+    Bm = jnp.repeat(Bm, rep, axis=1)                     # (B, H, n)
+    Cm = jnp.repeat(Cm, rep, axis=1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))[:, 0]  # (B, H)
+
+    dec = jnp.exp(dt * p["A"].astype(jnp.float32))       # (B, H)
+    upd = jnp.einsum("bhn,bhp,bh->bhpn", Bm.astype(jnp.float32),
+                     xs.astype(jnp.float32), dt)
+    new_state = ssm_state * dec[..., None, None] + upd
+    y = jnp.einsum("bhn,bhpn->bhp", Cm.astype(jnp.float32), new_state)
+    y = y.astype(x.dtype) + xs * p["D"].astype(x.dtype)[None, :, None]
+    y = y.reshape(B, 1, di)
+    y = rmsnorm(y * jax.nn.silu(z), p["out_ln"], cfg.norm_eps)
+    return x + y @ p["out_proj"], new_conv, new_state
+
+
+def decode_attn_cache(cfg: ModelConfig, batch: int, max_len: int,
+                      dtype=jnp.bfloat16) -> dict:
+    """Empty per-layer KV cache aval (stacked over layers elsewhere)."""
+    if cfg.use_mla:
+        return {
+            "c_kv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((batch, max_len, cfg.rope_head_dim), dtype),
+        }
+    hkv = max(cfg.n_kv_heads, cfg.kv_repeat_to)
+    return {
+        "k": jnp.zeros((batch, hkv, max_len, cfg.hd), dtype),
+        "v": jnp.zeros((batch, hkv, max_len, cfg.hd), dtype),
+    }

@@ -1,0 +1,435 @@
+"""Unified multi-family LM: dense / MoE / MLA / SSM / hybrid / enc-dec / VLM.
+
+One functional model, config-dispatched — the FLOWER "single source"
+rule: the same code lowers to the train step, the prefill step and the
+decode step, on one chip or on the multi-pod mesh.
+
+Layer iteration goes through :func:`_scan_or_loop`: ``scan_layers=True``
+(production) lowers to one ``lax.scan`` over stacked params;
+``scan_layers=False`` unrolls in Python.  The unrolled form exists for
+the dry-run *calibration* compiles — XLA's cost analysis counts a
+while-loop body once, so exact per-layer FLOP/byte/collective costs
+are extracted from unrolled L=1 vs L=2 modules (see launch/dryrun.py).
+
+Public API (all pure functions over pytrees):
+  param_defs(cfg)         declarative parameter tree (ParamDef leaves)
+  init(cfg, rng)          parameter values
+  param_axes(cfg)         logical-sharding tree (same structure)
+  forward(params, cfg, tokens, extra=...)   logits, aux
+  loss_fn(params, cfg, batch)              scalar + metrics
+  init_cache(cfg, batch, max_len)          decode cache pytree
+  prefill(params, cfg, tokens, cache)      fill cache, last-pos logits
+  decode_step(params, cfg, token, cache)   one-token step
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+__all__ = ["param_defs", "init", "param_axes", "forward", "loss_fn",
+           "init_cache", "prefill", "decode_step"]
+
+
+# ----------------------------------------------------------------------
+# parameter declaration
+# ----------------------------------------------------------------------
+def _stack(defs: Any, n: int) -> Any:
+    """Prepend a stacked 'layers' dim to every ParamDef in a tree."""
+    return jax.tree.map(
+        lambda d: L.ParamDef((n,) + d.shape, ("layers",) + d.axes, d.init,
+                             d.scale),
+        defs, is_leaf=lambda x: isinstance(x, L.ParamDef))
+
+
+def _block_defs(cfg: ModelConfig) -> dict:
+    if cfg.family in ("ssm", "hybrid"):
+        return {"mamba": L.mamba2_defs(cfg)}
+    attn = L.mla_defs(cfg) if cfg.use_mla else L.attn_defs(cfg)
+    mlp = L.moe_defs(cfg) if cfg.n_experts else L.mlp_defs(cfg)
+    return {"attn": attn, "mlp": mlp}
+
+
+def param_defs(cfg: ModelConfig) -> dict:
+    d, V = cfg.d_model, cfg.vocab_size
+    defs: dict[str, Any] = {
+        "embed": L.ParamDef((V, d), ("vocab", "embed"), scale=0.02),
+        "final_ln": L.ParamDef((d,), ("embed",), "ones"),
+        "blocks": _stack(_block_defs(cfg), cfg.n_layers),
+    }
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = L.ParamDef((d, V), ("embed", "vocab"))
+    if cfg.family == "hybrid":
+        defs["shared_attn"] = L.attn_defs(cfg)
+        defs["shared_mlp"] = L.mlp_defs(cfg)
+    if cfg.family == "encdec":
+        enc = {"attn": L.attn_defs(cfg), "mlp": L.mlp_defs(cfg)}
+        defs["enc_blocks"] = _stack(enc, cfg.n_enc_layers)
+        defs["enc_final_ln"] = L.ParamDef((d,), ("embed",), "ones")
+        defs["cross_blocks"] = _stack(L.attn_defs(cfg), cfg.n_layers)
+    return defs
+
+
+def init(cfg: ModelConfig, rng: jax.Array) -> dict:
+    return L.init_tree(param_defs(cfg), rng, jnp.dtype(cfg.dtype))
+
+
+def param_axes(cfg: ModelConfig) -> dict:
+    return L.axes_tree(param_defs(cfg))
+
+
+# ----------------------------------------------------------------------
+# scan-or-unroll layer driver
+# ----------------------------------------------------------------------
+def _scan_or_loop(cfg: ModelConfig, body: Callable, carry: Any,
+                  xs: Any, length: int):
+    """body(carry, x_slice, idx) -> (carry, out).  In scan mode idx is
+    a traced scalar; unrolled it is a Python int (so family dispatch
+    like the hybrid's shared-attention sites becomes static)."""
+    fn = _remat(body, cfg)
+    if cfg.scan_layers:
+        def b(c, inp):
+            x, i = inp
+            return fn(c, x, i)
+
+        return jax.lax.scan(b, carry, (xs, jnp.arange(length)))
+    outs = []
+    for i in range(length):
+        x_i = jax.tree.map(lambda a: a[i], xs)
+        carry, out = fn(carry, x_i, i)
+        outs.append(out)
+    if outs and outs[0] is not None:
+        outs = jax.tree.map(lambda *x: jnp.stack(x), *outs)
+    else:
+        outs = None
+    return carry, outs
+
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    return jax.checkpoint(fn, policy=policy)
+
+
+def _is_site(cfg: ModelConfig, idx) -> Any:
+    """Shared-attention site predicate (hybrid); static when unrolled."""
+    k = cfg.attn_every
+    if isinstance(idx, int):
+        return (idx % k) == (k - 1)
+    return (idx % k) == (k - 1)
+
+
+def _maybe_shared_attn(cfg, params, x, pos, idx, attn_cache=None,
+                       cache_index=None):
+    """Apply the hybrid's shared attention block at site layers."""
+    shared_a, shared_m = params["shared_attn"], params["shared_mlp"]
+    k = cfg.attn_every
+
+    def with_attn(op):
+        x, ac = op
+        if ac is None:
+            x2, _ = L.attention_block(shared_a, cfg, x, pos)
+            return L.mlp_block(shared_m, cfg, x2), None
+        site = idx // k
+        cache_l = jax.tree.map(
+            lambda c: jax.lax.dynamic_index_in_dim(c, site, 0, False), ac)
+        x2, new_l = L.attention_block(shared_a, cfg, x, pos, cache_l,
+                                      cache_index)
+        x2 = L.mlp_block(shared_m, cfg, x2)
+        ac = jax.tree.map(
+            lambda c, n: jax.lax.dynamic_update_index_in_dim(
+                c, n.astype(c.dtype), site, 0), ac, new_l)
+        return x2, ac
+
+    if isinstance(idx, int):                    # unrolled: static branch
+        if (idx % k) == (k - 1):
+            return with_attn((x, attn_cache))
+        return x, attn_cache
+    return jax.lax.cond(_is_site(cfg, idx), with_attn, lambda op: op,
+                        (x, attn_cache))
+
+
+# ----------------------------------------------------------------------
+# forward (training / scoring; no cache)
+# ----------------------------------------------------------------------
+def forward(params: dict, cfg: ModelConfig, tokens: jnp.ndarray,
+            extra_embeds: jnp.ndarray | None = None,
+            enc_embeds: jnp.ndarray | None = None
+            ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """tokens: (B, S_text).  extra_embeds: (B, S_vis, d) vision/audio
+    prefix (VLM).  enc_embeds: (B, S_enc, d) encoder frames (whisper).
+    Returns (logits (B, S_total, V), aux_loss)."""
+    x = L.embed_tokens(params["embed"], tokens).astype(jnp.dtype(cfg.dtype))
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(x.dtype), x], axis=1)
+    B, S, _ = x.shape
+    pos = jnp.arange(S)
+
+    enc_out = None
+    if cfg.family == "encdec":
+        assert enc_embeds is not None
+        enc_out = _encode(params, cfg, enc_embeds)
+
+    x, aux = _run_blocks(params, cfg, x, pos, enc_out=enc_out)
+    x = L.rmsnorm(x, params["final_ln"], cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    return L.unembed(x, head), aux
+
+
+def _encode(params, cfg, enc_embeds):
+    x = enc_embeds.astype(jnp.dtype(cfg.dtype))
+    pos = jnp.arange(x.shape[1])
+
+    def body(x, p, i):
+        x, _, _ = _dense_block(p, cfg, x, pos, causal=False)
+        return x, None
+
+    x, _ = _scan_or_loop(cfg, body, x, params["enc_blocks"],
+                         cfg.n_enc_layers)
+    return L.rmsnorm(x, params["enc_final_ln"], cfg.norm_eps)
+
+
+def _dense_block(p, cfg, x, pos, cache=None, idx=None, causal=True):
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.use_mla:
+        x, new_cache = L.mla_attention_block(p["attn"], cfg, x, pos,
+                                             cache, idx)
+    else:
+        x, new_cache = L.attention_block(p["attn"], cfg, x, pos, cache,
+                                         idx, causal=causal)
+    if cfg.n_experts:
+        x, aux = L.moe_block(p["mlp"], cfg, x)
+    else:
+        x = L.mlp_block(p["mlp"], cfg, x)
+    return x, new_cache, aux
+
+
+def _run_blocks(params, cfg, x, pos, enc_out=None):
+    aux0 = jnp.zeros((), jnp.float32)
+    Ldec = cfg.n_layers
+
+    if cfg.family == "ssm":
+        def body(x, p, i):
+            return L.mamba2_block(p["mamba"], cfg, x), None
+
+        x, _ = _scan_or_loop(cfg, body, x, params["blocks"], Ldec)
+        return x, aux0
+
+    if cfg.family == "hybrid":
+        def body(x, p, i):
+            x = L.mamba2_block(p["mamba"], cfg, x)
+            x, _ = _maybe_shared_attn(cfg, params, x, pos, i)
+            return x, None
+
+        x, _ = _scan_or_loop(cfg, body, x, params["blocks"], Ldec)
+        return x, aux0
+
+    if cfg.family == "encdec":
+        def body(x, p, i):
+            blk, cross = p
+            x, _, aux = _dense_block(blk, cfg, x, pos, causal=True)
+            x, _ = L.attention_block(cross, cfg, x, pos,
+                                     cross_kv=L_cross_kv(cross, cfg,
+                                                         enc_out),
+                                     causal=False)
+            return x, aux
+
+        x, auxs = _scan_or_loop(cfg, body, x,
+                                (params["blocks"],
+                                 params["cross_blocks"]), Ldec)
+        return x, (auxs.mean() if auxs is not None else aux0)
+
+    def body(x, p, i):
+        x, _, aux = _dense_block(p, cfg, x, pos)
+        return x, aux
+
+    x, auxs = _scan_or_loop(cfg, body, x, params["blocks"], Ldec)
+    return x, (auxs.mean() if auxs is not None else aux0)
+
+
+def L_cross_kv(p: dict, cfg: ModelConfig, enc_out: jnp.ndarray):
+    """Project encoder output to K/V for one cross-attention block."""
+    B, Se, d = enc_out.shape
+    Hkv, hd = cfg.n_kv_heads, cfg.hd
+    k = (enc_out @ p["wk"]).reshape(B, Se, Hkv, hd)
+    v = (enc_out @ p["wv"]).reshape(B, Se, Hkv, hd)
+    return jnp.moveaxis(k, 1, 2), jnp.moveaxis(v, 1, 2)
+
+
+# ----------------------------------------------------------------------
+# loss
+# ----------------------------------------------------------------------
+def loss_fn(params: dict, cfg: ModelConfig, batch: dict
+            ) -> tuple[jnp.ndarray, dict]:
+    """batch: tokens (B,S) int32, labels (B,S) int32 (-1 = ignore),
+    optionally extra_embeds / enc_embeds."""
+    logits, aux = forward(params, cfg, batch["tokens"],
+                          extra_embeds=batch.get("extra_embeds"),
+                          enc_embeds=batch.get("enc_embeds"))
+    labels = batch["labels"]
+    if logits.shape[1] != labels.shape[1]:     # VLM: drop vision prefix
+        logits = logits[:, logits.shape[1] - labels.shape[1]:]
+    mask = (labels >= 0).astype(jnp.float32)
+    ce = L.softmax_cross_entropy(logits, jnp.maximum(labels, 0))
+    loss = (ce * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    total = loss + cfg.router_aux_loss * aux
+    return total, {"loss": loss, "aux": aux, "tokens": mask.sum()}
+
+
+# ----------------------------------------------------------------------
+# serving: cache init / prefill / decode
+# ----------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> dict:
+    Ldec = cfg.n_layers
+    cache: dict[str, Any] = {"index": jnp.zeros((), jnp.int32)}
+    if cfg.family in ("ssm", "hybrid"):
+        conv_ch = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+        cache["conv"] = jnp.zeros((Ldec, batch, cfg.conv_width - 1,
+                                   conv_ch), dtype)
+        cache["ssm"] = jnp.zeros(
+            (Ldec, batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+            jnp.float32)
+        if cfg.family == "hybrid":
+            n_sites = cfg.n_layers // cfg.attn_every
+            cache["attn"] = jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (n_sites,) + x.shape).copy(),
+                L.decode_attn_cache(cfg, batch, max_len, dtype))
+        return cache
+    per_layer = L.decode_attn_cache(cfg, batch, max_len, dtype)
+    cache["attn"] = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (Ldec,) + x.shape).copy(), per_layer)
+    if cfg.family == "encdec":
+        cache["enc_out"] = jnp.zeros((batch, cfg.n_frontend_tokens or 1500,
+                                      cfg.d_model), dtype)
+    return cache
+
+
+def prefill(params: dict, cfg: ModelConfig, tokens: jnp.ndarray,
+            cache: dict, enc_embeds: jnp.ndarray | None = None,
+            extra_embeds: jnp.ndarray | None = None
+            ) -> tuple[jnp.ndarray, dict]:
+    """Run the prompt through the model, filling the cache.
+    Returns (last-position logits (B, V), cache)."""
+    x = L.embed_tokens(params["embed"], tokens).astype(jnp.dtype(cfg.dtype))
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(x.dtype), x], axis=1)
+    B, S, _ = x.shape
+    pos = jnp.arange(S)
+    idx0 = jnp.zeros((), jnp.int32)
+
+    enc_out = None
+    if cfg.family == "encdec":
+        enc_out = _encode(params, cfg, enc_embeds)
+        cache = dict(cache)
+        cache["enc_out"] = enc_out.astype(cache["enc_out"].dtype)
+
+    if cfg.family in ("ssm", "hybrid"):
+        x, cache = _iterate_ssm(params, cfg, x, pos, cache, idx0,
+                                decode=False)
+    else:
+        def body(x, p, i):
+            if cfg.family == "encdec":
+                blk, cross, cache_l = p
+            else:
+                (blk, cache_l), cross = p, None
+            x, new_c, _ = _dense_block(blk, cfg, x, pos, cache_l, idx0)
+            if cross is not None:
+                x, _ = L.attention_block(cross, cfg, x, pos,
+                                         cross_kv=L_cross_kv(cross, cfg,
+                                                             enc_out),
+                                         causal=False)
+            return x, new_c
+
+        xs = ((params["blocks"], params["cross_blocks"], cache["attn"])
+              if cfg.family == "encdec"
+              else (params["blocks"], cache["attn"]))
+        x, new_attn = _scan_or_loop(cfg, body, x, xs, cfg.n_layers)
+        cache = {**cache, "attn": new_attn}
+
+    cache["index"] = jnp.asarray(S, jnp.int32)
+    x = L.rmsnorm(x[:, -1:], params["final_ln"], cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    return L.unembed(x, head)[:, 0], cache
+
+
+def decode_step(params: dict, cfg: ModelConfig, token: jnp.ndarray,
+                cache: dict) -> tuple[jnp.ndarray, dict]:
+    """One token for every sequence.  token: (B,) int32.
+    Returns (logits (B, V), updated cache)."""
+    idx = cache["index"]
+    x = L.embed_tokens(params["embed"], token[:, None]
+                       ).astype(jnp.dtype(cfg.dtype))
+    # idx may be a scalar (lock-step serving) or a (B,) vector of
+    # per-slot lengths (continuous batching).
+    pos = idx[None] if idx.ndim == 0 else idx[:, None]
+
+    if cfg.family in ("ssm", "hybrid"):
+        x, cache = _iterate_ssm(params, cfg, x, pos, cache, idx,
+                                decode=True)
+    else:
+        enc_out = cache.get("enc_out")
+
+        def body(x, p, i):
+            if cfg.family == "encdec":
+                blk, cross, cache_l = p
+            else:
+                (blk, cache_l), cross = p, None
+            x, new_c, _ = _dense_block(blk, cfg, x, pos, cache_l, idx)
+            if cross is not None:
+                x, _ = L.attention_block(cross, cfg, x, pos,
+                                         cross_kv=L_cross_kv(cross, cfg,
+                                                             enc_out),
+                                         causal=False)
+            return x, new_c
+
+        xs = ((params["blocks"], params["cross_blocks"], cache["attn"])
+              if cfg.family == "encdec"
+              else (params["blocks"], cache["attn"]))
+        x, new_attn = _scan_or_loop(cfg, body, x, xs, cfg.n_layers)
+        cache = {**cache, "attn": new_attn}
+
+    cache["index"] = idx + 1
+    x = L.rmsnorm(x, params["final_ln"], cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    return L.unembed(x, head)[:, 0], cache
+
+
+def _iterate_ssm(params, cfg, x, pos, cache, cache_index, decode: bool):
+    """Layer loop for ssm/hybrid in both prefill and decode modes.
+
+    The hybrid's shared-attention cache is threaded through the carry
+    (its site indexing is dynamic under scan, static when unrolled).
+    """
+    has_attn = cfg.family == "hybrid"
+
+    def body(carry, p, i):
+        x, attn_cache = carry
+        blk, conv_l, ssm_l = p
+        if decode:
+            x, nc, ns = L.mamba2_decode_step(blk["mamba"], cfg, x,
+                                             conv_l, ssm_l)
+        else:
+            x, nc, ns = L.mamba2_block(blk["mamba"], cfg, x,
+                                       return_state=True)
+        if has_attn:
+            x, attn_cache = _maybe_shared_attn(
+                cfg, params, x, pos, i, attn_cache, cache_index)
+        return (x, attn_cache), (nc.astype(conv_l.dtype), ns)
+
+    carry = (x, cache.get("attn"))
+    xs = (params["blocks"], cache["conv"], cache["ssm"])
+    (x, attn_cache), stacked = _scan_or_loop(cfg, body, carry, xs,
+                                             cfg.n_layers)
+    nconv, nssm = stacked
+    new_cache = {**cache, "conv": nconv, "ssm": nssm}
+    if has_attn:
+        new_cache["attn"] = attn_cache
+    return x, new_cache

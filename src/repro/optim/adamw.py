@@ -1,0 +1,99 @@
+"""AdamW with fp32 master weights, global-norm clipping, LR schedules.
+
+Functional (optax-style but dependency-free): ``init`` builds the
+state tree (master, m, v — all the same structure as params, so the
+FSDP sharding rules apply verbatim), ``apply`` returns updated
+(params, state).  bf16 params are re-cast from the fp32 master every
+step, the standard large-scale recipe.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_apply", "lr_schedule",
+           "global_norm", "clip_by_global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr_peak: float = 3e-4
+    lr_min: float = 3e-5
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def lr_schedule(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    """Linear warmup then cosine decay to lr_min."""
+    step = step.astype(jnp.float32)
+    warm = cfg.lr_peak * step / max(cfg.warmup_steps, 1)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / max(cfg.decay_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.lr_min + 0.5 * (cfg.lr_peak - cfg.lr_min) \
+        * (1.0 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads: Any, max_norm: float
+                        ) -> tuple[Any, jnp.ndarray]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+def adamw_init(params: Any) -> dict:
+    # copy=True: when params are already f32, astype would alias the
+    # buffer and donation of (params, master) would double-donate.
+    f32 = lambda t: jax.tree.map(
+        lambda x: jnp.array(x, jnp.float32, copy=True), t)
+    zeros = lambda t: jax.tree.map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), t)
+    return {"master": f32(params), "m": zeros(params), "v": zeros(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adamw_apply(cfg: AdamWConfig, params: Any, grads: Any, state: dict
+                ) -> tuple[Any, dict, dict]:
+    """Returns (new_params (model dtype), new_state, metrics)."""
+    step = state["step"] + 1
+    lr = lr_schedule(cfg, step)
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(g, mst, m, v):
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mh = m / b1c
+        vh = v / b2c
+        new = mst - lr * (mh / (jnp.sqrt(vh) + cfg.eps)
+                          + cfg.weight_decay * mst)
+        return new, m, v
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_mst = jax.tree.leaves(state["master"])
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    out = [upd(g, mst, m, v)
+           for g, mst, m, v in zip(flat_g, flat_mst, flat_m, flat_v)]
+    new_master = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    new_params = jax.tree.map(
+        lambda new, old: new.astype(old.dtype), new_master, params)
+    new_state = {"master": new_master, "m": new_m, "v": new_v,
+                 "step": step}
+    return new_params, new_state, {"lr": lr, "grad_norm": gnorm}

@@ -1,0 +1,54 @@
+"""Int8 gradient compression with error feedback.
+
+Large-scale DP sync trick: quantize gradients to int8 (per-tensor
+scale) before the cross-pod reduction, keep the quantization error in
+a local buffer and add it back next step (error feedback), so the
+optimizer sees an unbiased long-run gradient.  4x fewer bytes on the
+slowest (pod-level DCN) axis.
+
+Pure functions so the train step stays jit-able; the error buffers are
+part of the optimizer state tree (same sharding as grads).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ef_init", "compress", "decompress", "ef_roundtrip"]
+
+
+def ef_init(grads_like: Any) -> Any:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32),
+                        grads_like)
+
+
+def compress(g: jnp.ndarray, err: jnp.ndarray
+             ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """g + err -> (int8 q, scale, new_err)."""
+    corrected = g.astype(jnp.float32) + err
+    scale = jnp.maximum(jnp.max(jnp.abs(corrected)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(corrected / scale), -127, 127).astype(jnp.int8)
+    new_err = corrected - q.astype(jnp.float32) * scale
+    return q, scale, new_err
+
+
+def decompress(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_roundtrip(grads: Any, err_state: Any) -> tuple[Any, Any]:
+    """Compress+decompress every leaf (the collective runs on the int8
+    payload in the real pipeline; on the dry-run mesh XLA sees the int8
+    all-reduce via the cast placement).  Returns (grads', new_err)."""
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(err_state)
+    outs = []
+    errs = []
+    for g, e in zip(flat_g, flat_e):
+        q, s, ne = compress(g, e)
+        outs.append(decompress(q, s).astype(g.dtype))
+        errs.append(ne)
+    return (jax.tree.unflatten(treedef, outs),
+            jax.tree.unflatten(treedef, errs))

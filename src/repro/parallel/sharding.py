@@ -1,0 +1,152 @@
+"""Logical-axis sharding rules: DP / FSDP / TP / SP / EP on one mesh.
+
+Models carry *logical* axis names (declared next to every parameter in
+``ParamDef.axes`` and at activation constraint points).  This module
+maps them onto the physical mesh — the cluster-scale version of
+FLOWER's memory-bundle assignment: independent dataflow paths land on
+different physical resources, from one declarative source.
+
+Divisibility-aware: a logical axis only binds to a mesh axis when the
+dimension divides evenly (or the mesh axis is explicitly marked
+``uneven_ok``); otherwise it is left unsharded and the decision is
+recorded so the dry-run can report it (e.g. qwen1.5's 40 heads on a
+16-way model axis).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["ShardingRules", "TRAIN_RULES", "SERVE_RULES",
+           "make_param_shardings", "make_activation_fn", "mesh_axis_size",
+           "spec_for_axes"]
+
+AxisBinding = Any  # str | tuple[str, ...] | None
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """logical axis -> mesh axis (or tuple of mesh axes, or None)."""
+
+    rules: tuple[tuple[str, AxisBinding], ...]
+    #: logical axes allowed to shard unevenly (GSPMD pads); attention
+    #: heads are worth sharding even at 40/16.
+    uneven_ok: frozenset[str] = frozenset()
+
+    def binding(self, logical: str | None) -> AxisBinding:
+        if logical is None:
+            return None
+        for k, v in self.rules:
+            if k == logical:
+                return v
+        return None
+
+    def replace(self, **kw: AxisBinding) -> "ShardingRules":
+        rules = tuple((k, kw.pop(k)) if k in kw else (k, v)
+                      for k, v in self.rules)
+        rules += tuple(kw.items())
+        return dataclasses.replace(self, rules=rules)
+
+
+#: training: DP over (pod, data); FSDP (weight sharding) over data;
+#: TP over model; experts over model when divisible.
+TRAIN_RULES = ShardingRules(rules=(
+    ("batch", ("pod", "data")),
+    ("seq", None),
+    ("embed", "data"),           # FSDP: weights' d_model dim over data
+    ("vocab", "model"),
+    ("heads", "model"),
+    ("kv_heads", "model"),
+    ("ff", "model"),
+    ("experts", "model"),
+    ("expert_ff", None),         # used when experts don't divide
+    ("ssm_inner", "model"),
+    ("layers", None),
+), uneven_ok=frozenset({"heads", "kv_heads"}))
+
+#: serving: no FSDP (weights resident), TP over model, batch over data.
+SERVE_RULES = TRAIN_RULES.replace(embed=None)
+
+
+def mesh_axis_size(mesh: Mesh, binding: AxisBinding) -> int:
+    if binding is None:
+        return 1
+    if isinstance(binding, str):
+        return mesh.shape[binding] if binding in mesh.shape else 1
+    return int(np.prod([mesh.shape.get(a, 1) for a in binding]))
+
+
+def spec_for_axes(mesh: Mesh, rules: ShardingRules,
+                  axes: tuple[str | None, ...],
+                  shape: tuple[int, ...] | None = None,
+                  notes: list[str] | None = None,
+                  allow_uneven: bool = False) -> P:
+    """PartitionSpec for one array given its logical axes (and shape,
+    for divisibility checks).
+
+    ``allow_uneven`` is only legal for intermediate values
+    (with_sharding_constraint; GSPMD pads) — pjit *arguments* must
+    shard evenly, so it defaults off.
+    """
+    used: set[str] = set()
+    dims: list[AxisBinding] = []
+    for i, lg in enumerate(axes):
+        b = rules.binding(lg)
+        if b is None:
+            dims.append(None)
+            continue
+        names = (b,) if isinstance(b, str) else tuple(b)
+        names = tuple(n for n in names if n in mesh.shape and n not in used)
+        if not names:
+            dims.append(None)
+            continue
+        size = int(np.prod([mesh.shape[n] for n in names]))
+        if shape is not None and shape[i] % size != 0:
+            if allow_uneven and lg in rules.uneven_ok and shape[i] >= size:
+                pass                       # GSPMD pads; accept
+            else:
+                if notes is not None:
+                    notes.append(
+                        f"axis {lg!r} dim {shape[i]} !% {size} -> unsharded")
+                dims.append(None)
+                continue
+        used.update(names)
+        dims.append(names[0] if len(names) == 1 else names)
+    return P(*dims)
+
+
+def make_param_shardings(mesh: Mesh, axes: Any, rules: ShardingRules,
+                         shapes: Any = None, notes: list[str] | None = None
+                         ) -> Any:
+    """Tree of NamedSharding matching an axes_tree (and optional shape
+    tree from jax.eval_shape for divisibility checks)."""
+    is_axes = lambda x: (isinstance(x, tuple)
+                         and all(isinstance(a, (str, type(None)))
+                                 for a in x))
+    if shapes is None:
+        return jax.tree.map(
+            lambda ax: NamedSharding(mesh, spec_for_axes(mesh, rules, ax,
+                                                         None, notes)),
+            axes, is_leaf=is_axes)
+    return jax.tree.map(
+        lambda ax, sh: NamedSharding(
+            mesh, spec_for_axes(mesh, rules, ax, tuple(sh.shape), notes)),
+        axes, shapes, is_leaf=is_axes)
+
+
+def make_activation_fn(mesh: Mesh, rules: ShardingRules):
+    """fn(x, logical_axes) -> with_sharding_constraint(x, spec)."""
+
+    def constrain(x: jnp.ndarray, axes: tuple[str | None, ...]):
+        if len(axes) != x.ndim:
+            return x
+        spec = spec_for_axes(mesh, rules, axes, tuple(x.shape),
+                             allow_uneven=True)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    return constrain

@@ -1,0 +1,241 @@
+"""Step-function builders: train / prefill / decode.
+
+This is the generated "host code" (FLOWER C4) for the LM system: from
+a ModelConfig + mesh, build the jitted, sharded, donated step functions
+with every buffer's placement derived from the declarative param axes.
+The model code never mentions the mesh; the launcher never mentions
+model internals.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import model as M
+from repro.models import layers as L
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.optim.adamw import AdamWConfig, adamw_apply, adamw_init
+from repro.optim.compression import ef_init, ef_roundtrip
+from repro.parallel.sharding import (ShardingRules, TRAIN_RULES,
+                                     SERVE_RULES, make_activation_fn,
+                                     make_param_shardings, spec_for_axes)
+
+__all__ = ["make_train_step", "make_prefill_step", "make_decode_step",
+           "train_state_shardings", "batch_specs", "abstract_train_state",
+           "abstract_cache", "cache_shardings"]
+
+
+# ----------------------------------------------------------------------
+# abstract state + shardings
+# ----------------------------------------------------------------------
+def abstract_train_state(cfg: ModelConfig, compress_grads: bool = False
+                         ) -> Any:
+    """ShapeDtypeStructs of the full train state (no allocation)."""
+
+    def build():
+        params = M.init(cfg, jax.random.PRNGKey(0))
+        state = {"params": params, "opt": adamw_init(params)}
+        if compress_grads:
+            state["ef"] = ef_init(params)
+        return state
+
+    return jax.eval_shape(build)
+
+
+def train_state_shardings(cfg: ModelConfig, mesh: Mesh,
+                          rules: ShardingRules = TRAIN_RULES,
+                          compress_grads: bool = False,
+                          notes: list[str] | None = None) -> Any:
+    axes = M.param_axes(cfg)
+    shapes = jax.eval_shape(lambda: M.init(cfg, jax.random.PRNGKey(0)))
+    p_sh = make_param_shardings(mesh, axes, rules, shapes, notes)
+    state_sh = {"params": p_sh,
+                "opt": {"master": p_sh, "m": p_sh, "v": p_sh,
+                        "step": NamedSharding(mesh, P())}}
+    if compress_grads:
+        state_sh["ef"] = p_sh
+    return state_sh
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig
+                ) -> dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of one shape
+    cell (the dry-run contract)."""
+    B, S = shape.global_batch, shape.seq_len
+    f32 = jnp.dtype(cfg.dtype)
+    if shape.kind == "train":
+        n_extra = cfg.n_frontend_tokens if cfg.family in ("vlm",) else 0
+        S_text = S - n_extra
+        out = {"tokens": jax.ShapeDtypeStruct((B, S_text), jnp.int32),
+               "labels": jax.ShapeDtypeStruct((B, S_text), jnp.int32)}
+        if cfg.family == "vlm":
+            out["extra_embeds"] = jax.ShapeDtypeStruct(
+                (B, n_extra, cfg.d_model), f32)
+        if cfg.family == "encdec":
+            out["enc_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_frontend_tokens, cfg.d_model), f32)
+        return out
+    if shape.kind == "prefill":
+        n_extra = cfg.n_frontend_tokens if cfg.family in ("vlm",) else 0
+        out = {"tokens": jax.ShapeDtypeStruct((B, S - n_extra), jnp.int32)}
+        if cfg.family == "vlm":
+            out["extra_embeds"] = jax.ShapeDtypeStruct(
+                (B, n_extra, cfg.d_model), f32)
+        if cfg.family == "encdec":
+            out["enc_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_frontend_tokens, cfg.d_model), f32)
+        return out
+    # decode: one new token against a cache of length S
+    return {"token": jax.ShapeDtypeStruct((B,), jnp.int32)}
+
+
+def batch_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                    rules: ShardingRules) -> Any:
+    specs = batch_specs(cfg, shape)
+    out = {}
+    for k, v in specs.items():
+        axes: tuple[str | None, ...]
+        if v.ndim == 1:
+            axes = ("batch",)
+        elif v.ndim == 2:
+            axes = ("batch", "seq")
+        else:
+            axes = ("batch", "seq", None)
+        out[k] = NamedSharding(mesh, spec_for_axes(mesh, rules, axes,
+                                                   tuple(v.shape)))
+    return out
+
+
+def abstract_cache(cfg: ModelConfig, shape: ShapeConfig) -> Any:
+    return jax.eval_shape(
+        lambda: M.init_cache(cfg, shape.global_batch, shape.seq_len,
+                             dtype=jnp.dtype(cfg.dtype)))
+
+
+def cache_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                    rules: ShardingRules = SERVE_RULES) -> Any:
+    """KV caches: batch over (pod, data), heads over model; SSM states:
+    batch over (pod, data), inner dim over model."""
+    aval = abstract_cache(cfg, shape)
+
+    def spec(path_key: str, v: jax.ShapeDtypeStruct) -> NamedSharding:
+        name = path_key
+        if v.ndim == 0 or "index" in name:
+            return NamedSharding(mesh, P())
+        if "enc_out" in name:
+            axes = ("batch", "seq", None)
+        elif "conv" in name:
+            axes = ("layers", "batch", None, "ssm_inner")
+        elif "ssm" in name:
+            axes = ("layers", "batch", "ssm_inner", None, None)
+        elif "c_kv" in name or "k_rope" in name:
+            # latent cache: shard the long seq dim over the model axis
+            axes = ("layers", "batch", "seq_model", None)
+        else:  # k / v attention caches (layers, B, Hkv, S, D)
+            msize = mesh.shape.get("model", 1)
+            if v.ndim >= 3 and v.shape[2] % msize == 0:
+                axes = ("layers", "batch", "kv_heads", "seq", None)
+            else:
+                # kv heads don't divide the model axis (MQA/GQA-small):
+                # shard the cache length instead — decode attention
+                # reduces over seq, XLA inserts the psum.
+                axes = ("layers", "batch", None, "seq_model", None)
+        axes = axes[:v.ndim] if len(axes) >= v.ndim else \
+            (None,) * (v.ndim - len(axes)) + axes
+        rules_sm = rules.replace(seq_model="model")
+        return NamedSharding(mesh, spec_for_axes(mesh, rules_sm, axes,
+                                                 tuple(v.shape)))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(aval)
+    out = []
+    for path, v in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out.append(spec(key, v))
+    return jax.tree.unflatten(treedef, out)
+
+
+# ----------------------------------------------------------------------
+# step builders
+# ----------------------------------------------------------------------
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                    mesh: Mesh | None = None,
+                    rules: ShardingRules = TRAIN_RULES,
+                    compress_grads: bool = False):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def train_step(state: dict, batch: dict) -> tuple[dict, dict]:
+        def compute(params, mbatch):
+            if mesh is not None:
+                with L.activation_rules(make_activation_fn(mesh, rules)):
+                    return M.loss_fn(params, cfg, mbatch)
+            return M.loss_fn(params, cfg, mbatch)
+
+        mb = max(cfg.microbatches, 1)
+        if mb == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                compute, has_aux=True)(state["params"], batch)
+        else:
+            # gradient accumulation: peak activation memory / mb
+            split = jax.tree.map(
+                lambda x: x.reshape(mb, x.shape[0] // mb, *x.shape[1:]),
+                batch)
+
+            def mb_step(acc, mbatch):
+                (l, met), g = jax.value_and_grad(
+                    compute, has_aux=True)(state["params"], mbatch)
+                acc = jax.tree.map(
+                    lambda a, gi: a + gi.astype(jnp.float32) / mb, acc, g)
+                return acc, (l, met)
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32),
+                state["params"])
+            grads, (losses, mets) = jax.lax.scan(mb_step, zeros, split)
+            loss = losses.mean()
+            metrics = jax.tree.map(lambda x: x.mean(), mets)
+        new_state = dict(state)
+        if compress_grads:
+            grads, new_state["ef"] = ef_roundtrip(grads, state["ef"])
+        new_params, new_opt, opt_metrics = adamw_apply(
+            opt_cfg, state["params"], grads, state["opt"])
+        new_state["params"] = new_params
+        new_state["opt"] = new_opt
+        metrics = {**metrics, **opt_metrics, "total_loss": loss}
+        return new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, mesh: Mesh | None = None,
+                      rules: ShardingRules = SERVE_RULES):
+    def prefill_step(params, batch, cache):
+        def run():
+            return M.prefill(params, cfg, batch["tokens"], cache,
+                             enc_embeds=batch.get("enc_embeds"),
+                             extra_embeds=batch.get("extra_embeds"))
+
+        if mesh is not None:
+            with L.activation_rules(make_activation_fn(mesh, rules)):
+                return run()
+        return run()
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, mesh: Mesh | None = None,
+                     rules: ShardingRules = SERVE_RULES):
+    def decode_step(params, batch, cache):
+        def run():
+            return M.decode_step(params, cfg, batch["token"], cache)
+
+        if mesh is not None:
+            with L.activation_rules(make_activation_fn(mesh, rules)):
+                return run()
+        return run()
+
+    return decode_step

@@ -1,0 +1,111 @@
+"""The training orchestrator: data -> step -> metrics -> checkpoints,
+with preemption, straggler and elastic-restart handling.
+
+``Trainer`` owns no model logic — it wires the generated step function
+(runtime.steps), the data pipeline, the async checkpointer and the
+fault machinery together; exactly the boilerplate FLOWER's host-code
+generation removes from the user.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.optim.adamw import AdamWConfig, adamw_init
+from repro.optim.compression import ef_init
+from repro.runtime.fault import PreemptionGuard, StragglerMonitor
+from repro.runtime.steps import make_train_step
+
+__all__ = ["Trainer", "TrainerConfig"]
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_every: int = 50
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_keep: int = 3
+    log_every: int = 10
+    compress_grads: bool = False
+    seed: int = 0
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, opt_cfg: AdamWConfig,
+                 tcfg: TrainerConfig, data, mesh=None,
+                 state_shardings=None):
+        self.cfg, self.opt_cfg, self.tcfg = cfg, opt_cfg, tcfg
+        self.data = data
+        self.mesh = mesh
+        self.ckpt = Checkpointer(tcfg.ckpt_dir, keep=tcfg.ckpt_keep)
+        self.monitor = StragglerMonitor(n_hosts=jax.process_count())
+        step_fn = make_train_step(cfg, opt_cfg, mesh=mesh,
+                                  compress_grads=tcfg.compress_grads)
+        jit_kw: dict[str, Any] = {"donate_argnums": (0,)}
+        if state_shardings is not None:
+            jit_kw["in_shardings"] = (state_shardings, None)
+            jit_kw["out_shardings"] = (state_shardings, None)
+        self.step_fn = jax.jit(step_fn, **jit_kw)
+        self.state = self._init_or_restore(state_shardings)
+        self.history: list[dict] = []
+
+    # -- state ----------------------------------------------------------
+    def _fresh_state(self):
+        params = M.init(self.cfg, jax.random.PRNGKey(self.tcfg.seed))
+        state = {"params": params, "opt": adamw_init(params)}
+        if self.tcfg.compress_grads:
+            state["ef"] = ef_init(params)
+        return state
+
+    def _init_or_restore(self, shardings):
+        latest = self.ckpt.latest_step()
+        if latest is None:
+            return self._fresh_state()
+        like = jax.eval_shape(self._fresh_state)
+        state = self.ckpt.restore(like, step=latest, shardings=shardings)
+        return state
+
+    @property
+    def step(self) -> int:
+        return int(jax.device_get(self.state["opt"]["step"]))
+
+    # -- loop -----------------------------------------------------------
+    def run(self, steps: int | None = None) -> list[dict]:
+        steps = steps if steps is not None else self.tcfg.total_steps
+        with PreemptionGuard() as guard:
+            while self.step < steps:
+                t0 = time.perf_counter()
+                batch = {k: jnp.asarray(v)
+                         for k, v in self.data.batch(self.step).items()}
+                self.state, metrics = self.step_fn(self.state, batch)
+                metrics = {k: float(jax.device_get(v))
+                           for k, v in metrics.items()}
+                dt = time.perf_counter() - t0
+                metrics["step_time_s"] = dt
+                metrics["step"] = self.step
+                self.history.append(metrics)
+                flagged = self.monitor.observe(np.array([dt]))
+                if flagged:
+                    metrics["stragglers"] = flagged
+                if self.step % self.tcfg.log_every == 0:
+                    print(f"step {self.step:6d} "
+                          f"loss {metrics['loss']:8.4f} "
+                          f"|g| {metrics['grad_norm']:8.3f} "
+                          f"lr {metrics['lr']:.2e} "
+                          f"{dt*1e3:8.1f} ms")
+                if self.step % self.tcfg.ckpt_every == 0:
+                    self.ckpt.save(self.state, self.step)
+                if guard.preempted:
+                    print("preemption notice: synchronous final save")
+                    self.ckpt.save(self.state, self.step, blocking=True)
+                    break
+        self.ckpt.wait()
+        return self.history

@@ -1,0 +1,19 @@
+"""Shared test fixtures.
+
+NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see
+the real single CPU device.  Multi-device tests spawn subprocesses with
+their own --xla_force_host_platform_device_count (see
+tests/test_distribution.py).
+"""
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

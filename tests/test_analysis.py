@@ -1,0 +1,98 @@
+"""HLO parsing + roofline arithmetic."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.hlo import collective_bytes, count_ops, shape_bytes
+from repro.analysis.roofline import HW, analyze, model_flops
+from repro.configs import get_config
+from repro.models.config import SHAPES
+
+
+def test_shape_bytes():
+    assert shape_bytes("f32[16,128]") == 16 * 128 * 4
+    assert shape_bytes("bf16[4,8]{1,0}") == 4 * 8 * 2
+    assert shape_bytes("(bf16[2,2], u32[])") == 8 + 4
+    assert shape_bytes("pred[]") == 1
+
+
+HLO_FIXTURE = """
+HloModule m
+ENTRY e {
+  %p = f32[64,64]{1,0} parameter(0)
+  %ag = f32[64,512]{1,0} all-gather(%p), replica_groups=[8,8]<=[64], dimensions={1}
+  %ar = f32[64,64]{1,0} all-reduce(%p), replica_groups={{0,1,2,3}}, to_apply=%add
+  %rs = f32[8,64]{1,0} reduce-scatter(%p), replica_groups=[8,8]<=[64], dimensions={0}, to_apply=%add
+  %cp = f32[64,64]{1,0} collective-permute(%p), source_target_pairs={{0,1}}
+  %aa = f32[64,64]{1,0} all-to-all(%p), replica_groups={{0,1}}
+}
+"""
+
+
+def test_collective_bytes_fixture():
+    out = collective_bytes(HLO_FIXTURE)
+    f = 4
+    assert out["all-gather"] == 64 * 512 * f
+    assert out["all-reduce"] == 64 * 64 * f
+    assert out["reduce-scatter"] == 8 * 64 * f * 8   # x group size
+    assert out["collective-permute"] == 64 * 64 * f
+    assert out["all-to-all"] == 64 * 64 * f
+    assert out["ops"] == 5
+
+
+def test_collective_bytes_real_module():
+    """Parse a real sharded module compiled on host devices."""
+    import subprocess
+    import sys
+    code = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+import sys
+sys.path.insert(0, "src")
+from repro.analysis.hlo import collective_bytes
+mesh = jax.make_mesh((8,), ("m",))
+def f(x, w):
+    y = x @ w
+    return y.sum()
+x = jax.ShapeDtypeStruct((64, 512), jnp.float32)
+w = jax.ShapeDtypeStruct((512, 64), jnp.float32)
+c = jax.jit(f, in_shardings=(NamedSharding(mesh, P(None, "m")),
+                             NamedSharding(mesh, P("m", None))),
+            out_shardings=NamedSharding(mesh, P())).lower(x, w).compile()
+out = collective_bytes(c.as_text())
+assert out["total"] > 0, out
+print("TOTAL", out["total"])
+"""
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=300)
+    assert r.returncode == 0, r.stderr
+    assert "TOTAL" in r.stdout
+
+
+def test_count_ops():
+    assert count_ops(HLO_FIXTURE)["while"] == 0
+
+
+def test_roofline_terms_and_dominance():
+    cfg = get_config("granite-3-2b")
+    shape = SHAPES["train_4k"]
+    cost = {"flops": 1e15, "bytes accessed": 1e12}
+    rep = analyze("granite_3_2b", shape, "pod", 256, cost, HLO_FIXTURE,
+                  {}, cfg)
+    hw = HW()
+    assert abs(rep.t_compute - 1e15 / (256 * hw.peak_flops)) < 1e-12
+    assert abs(rep.t_memory - 1e12 / (256 * hw.hbm_bw)) < 1e-12
+    assert rep.dominant in ("compute", "memory", "collective")
+    assert rep.model_flops == model_flops(cfg, shape)
+    # train model flops = 6 N D
+    assert abs(rep.model_flops
+               - 6.0 * cfg.n_active_params() * 256 * 4096) < 1e6
+
+
+def test_model_flops_kinds():
+    cfg = get_config("granite-3-2b")
+    assert model_flops(cfg, SHAPES["decode_32k"]) == \
+        2.0 * cfg.n_active_params() * 128
+    assert model_flops(cfg, SHAPES["prefill_32k"]) == \
+        2.0 * cfg.n_active_params() * 32 * 32768

@@ -1,0 +1,133 @@
+"""Dataflow-graph extraction & validation (paper Section IV-A)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (ChannelContractError, CycleError, DataflowGraph,
+                        build_schedule)
+
+
+def test_builder_produces_valid_graph():
+    g = DataflowGraph("t")
+    x = g.input("x", (8, 128))
+    a, b = g.split(x)
+    y = g.point2(g.point(a, jnp.abs), g.point(b, jnp.exp), jnp.add)
+    g.output(y, "y")
+    g.validate()
+    order = g.toposort()
+    assert len(order) == 4
+    # write-before-read: every input channel's producer precedes the stage
+    seen = set()
+    for st_ in order:
+        for ch in st_.inputs:
+            if ch.producer is not None:
+                assert ch.producer in seen
+        seen.add(st_)
+
+
+def test_cycle_detected():
+    g = DataflowGraph("cyc")
+    c1 = g.channel((8, 128))
+    c2 = g.channel((8, 128))
+    g.task("a", "point", jnp.abs, [c1], [c2])
+    g.task("b", "point", jnp.abs, [c2], [c1])
+    with pytest.raises((CycleError, ChannelContractError)):
+        g.validate()
+
+
+def test_double_write_rejected():
+    g = DataflowGraph("dw")
+    x = g.input("x", (8, 128))
+    c = g.channel((8, 128))
+    g.task("a", "point", jnp.abs, [x], [c])
+    with pytest.raises(ChannelContractError):
+        g.task("b", "point", jnp.abs, [x], [c])
+
+
+def test_double_read_rejected():
+    """The paper: channels are read only once; fan-out needs split."""
+    g = DataflowGraph("dr")
+    x = g.input("x", (8, 128))
+    g.output(g.point(x, jnp.abs), "y1")
+    g.output(g.point(x, jnp.exp), "y2")   # second read of x
+    with pytest.raises(ChannelContractError):
+        g.validate()
+
+
+def test_unread_channel_rejected():
+    g = DataflowGraph("ur")
+    x = g.input("x", (8, 128))
+    g.point(x, jnp.abs)   # result never read, never output
+    with pytest.raises(ChannelContractError):
+        g.validate()
+
+
+def test_missing_producer_rejected():
+    g = DataflowGraph("mp")
+    c = g.channel((8, 128))
+    g.output(g.point(c, jnp.abs), "y")
+    with pytest.raises(ChannelContractError):
+        g.validate()
+
+
+def test_isolated_stage_schedules():
+    """Paper: isolated tasks still execute (in parallel with the rest)."""
+    g = DataflowGraph("iso")
+    x = g.input("x", (8, 128))
+    g.output(g.point(x, jnp.abs), "y")
+    z = g.input("z", (8, 128))
+    g.output(g.point(z, jnp.exp), "w")
+    g.validate()
+    assert len(g.toposort()) == 2
+    sched = build_schedule(g)
+    assert sum(len(grp.stages) for grp in sched.groups) == 2
+
+
+# ----------------------------------------------------------------------
+# property: random layered DAGs always validate + schedule
+# ----------------------------------------------------------------------
+@st.composite
+def layered_dag(draw):
+    g = DataflowGraph("prop")
+    shape = (8, 128)
+    live = [g.input(f"in{i}", shape)
+            for i in range(draw(st.integers(1, 3)))]
+    n_stages = draw(st.integers(1, 12))
+    for i in range(n_stages):
+        kind = draw(st.sampled_from(["point", "split", "stencil", "point2"]))
+        src = draw(st.integers(0, len(live) - 1))
+        ch = live.pop(src)
+        if kind == "point":
+            live.append(g.point(ch, jnp.abs))
+        elif kind == "stencil":
+            live.append(g.stencil(ch, (3, 3), lambda p: p.sum(0)))
+        elif kind == "split":
+            live.extend(g.split(ch, 2))
+        else:
+            if not live:
+                live.append(g.point(ch, jnp.abs))
+                continue
+            src2 = draw(st.integers(0, len(live) - 1))
+            ch2 = live.pop(src2)
+            live.append(g.point2(ch, ch2, jnp.add))
+    for i, ch in enumerate(live):
+        if ch.is_graph_input:          # an input cannot also be an output
+            ch = g.point(ch, jnp.abs)
+        g.output(ch, f"out{i}")
+    return g
+
+
+@given(layered_dag())
+@settings(max_examples=25, deadline=None)
+def test_random_dag_validates_and_schedules(g):
+    g.validate()
+    order = g.toposort()
+    assert len(order) == len(g.stages)
+    sched = build_schedule(g)
+    # every stage lands in exactly one group
+    placed = [s for grp in sched.groups for s in grp.stages]
+    assert sorted(id(s) for s in placed) == sorted(id(s) for s in g.stages)
+    # bundle assignment covers all graph I/O
+    for ch in g.graph_inputs + g.graph_outputs:
+        assert ch.bundle is not None

@@ -1,0 +1,153 @@
+"""Per-kernel shape/dtype sweeps against the ref.py oracles
+(interpret mode == the kernel body executed on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref as R
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.fused_mlp import fused_mlp
+from repro.kernels.ssd_scan import ssd_scan
+from repro.kernels.stream_pipeline import (stream_pipeline,
+                                           stream_pipeline_staged)
+
+
+def _tol(dtype):
+    return 3e-2 if dtype == jnp.bfloat16 else 2e-3
+
+
+@pytest.mark.parametrize("B,Hq,Hkv,S,D,causal,dtype", [
+    (2, 4, 2, 256, 128, True, jnp.float32),
+    (1, 8, 1, 384, 128, True, jnp.float32),      # MQA
+    (2, 4, 4, 200, 128, False, jnp.float32),     # ragged S
+    (1, 4, 2, 256, 64, True, jnp.float32),       # small head dim
+    (1, 4, 2, 256, 128, True, jnp.bfloat16),
+])
+def test_flash_attention(B, Hq, Hkv, S, D, causal, dtype, rng):
+    q = jnp.asarray(rng.normal(size=(B, Hq, S, D)), dtype)
+    k = jnp.asarray(rng.normal(size=(B, Hkv, S, D)), dtype)
+    v = jnp.asarray(rng.normal(size=(B, Hkv, S, D)), dtype)
+    o = flash_attention(q, k, v, causal=causal, interpret=True)
+    r = R.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(
+        np.asarray(o, np.float32), np.asarray(r, np.float32),
+        atol=_tol(dtype), rtol=_tol(dtype))
+
+
+def test_flash_attention_mla_shapes(rng):
+    """Dv != Dk (MLA absorbed attention == MQA over latents)."""
+    B, Hq, S, Dk, Dv = 2, 8, 256, 288, 256
+    q = jnp.asarray(rng.normal(size=(B, Hq, S, Dk)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, 1, S, Dk)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, 1, S, Dv)), jnp.float32)
+    o = flash_attention(q, k, v, causal=True, scale=0.1, interpret=True)
+    r = R.flash_attention_ref(q, k, v, causal=True, scale=0.1)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r), atol=2e-3)
+
+
+def test_flash_attention_padding_bias(rng):
+    B, H, S, D = 2, 4, 256, 128
+    q = jnp.asarray(rng.normal(size=(B, H, S, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, H, S, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, H, S, D)), jnp.float32)
+    lens = np.array([200, 128])
+    bias = jnp.where(np.arange(S)[None] < lens[:, None], 0.0, -1e30
+                     ).astype(jnp.float32)
+    o = flash_attention(q, k, v, bias=bias, causal=False, interpret=True)
+    r = R.flash_attention_ref(q, k, v, bias=bias, causal=False)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r), atol=2e-3)
+
+
+@pytest.mark.parametrize("B,Hq,Hkv,S,D", [
+    (2, 8, 2, 512, 128), (1, 8, 8, 300, 128), (4, 4, 1, 1024, 64)])
+def test_decode_attention(B, Hq, Hkv, S, D, rng):
+    q = jnp.asarray(rng.normal(size=(B, Hq, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, Hkv, S, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, Hkv, S, D)), jnp.float32)
+    lens = rng.integers(S // 2, S, size=(B,))
+    bias = jnp.where(np.arange(S)[None] < lens[:, None], 0.0, -1e30
+                     ).astype(jnp.float32)
+    o = decode_attention(q, k, v, bias=bias, interpret=True)
+    r = R.decode_attention_ref(q, k, v, bias=bias)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r), atol=2e-3)
+
+
+@pytest.mark.parametrize("T,d,f,dtype", [
+    (128, 256, 512, jnp.float32), (200, 384, 1000, jnp.float32),
+    (64, 256, 768, jnp.bfloat16)])
+def test_fused_mlp(T, d, f, dtype, rng):
+    x = jnp.asarray(rng.normal(size=(T, d)), dtype)
+    wn = jnp.asarray(rng.normal(size=(d,)), dtype)
+    wg = jnp.asarray(rng.normal(size=(d, f)) * 0.05, dtype)
+    wu = jnp.asarray(rng.normal(size=(d, f)) * 0.05, dtype)
+    wd = jnp.asarray(rng.normal(size=(f, d)) * 0.05, dtype)
+    o = fused_mlp(x, wn, wg, wu, wd, block_t=64, block_f=256,
+                  interpret=True)
+    r = R.fused_mlp_ref(x, wn, wg, wu, wd)
+    tol = 1e-1 if dtype == jnp.bfloat16 else 1e-3
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(r, np.float32), atol=tol)
+
+
+@pytest.mark.parametrize("b,s,h,p,g,n,chunk", [
+    (2, 128, 4, 16, 2, 32, 32), (1, 256, 8, 64, 1, 128, 64),
+    (2, 96, 4, 16, 4, 32, 32)])
+def test_ssd_scan_kernel(b, s, h, p, g, n, chunk, rng):
+    x = jnp.asarray(rng.normal(size=(b, s, h, p)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, size=(b, s, h)), jnp.float32)
+    A = jnp.asarray(-rng.uniform(0.5, 2.0, size=(h,)), jnp.float32)
+    B = jnp.asarray(rng.normal(size=(b, s, g, n)), jnp.float32)
+    C = jnp.asarray(rng.normal(size=(b, s, g, n)), jnp.float32)
+    y, fs = ssd_scan(x, dt, A, B, C, chunk=chunk, interpret=True)
+    yr, fr = R.ssd_scan_ref(x, dt, A, B, C, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=3e-4)
+    np.testing.assert_allclose(np.asarray(fs), np.asarray(fr), atol=3e-4)
+
+
+@given(st.integers(8, 96), st.integers(2, 12), st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_ssd_chunked_equals_sequential(s, h, seed):
+    """Property: the chunked SSD scan == token-by-token recurrence."""
+    rng = np.random.default_rng(seed)
+    b, p, g, n = 1, 8, 1, 16
+    x = jnp.asarray(rng.normal(size=(b, s, h, p)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.3, size=(b, s, h)), jnp.float32)
+    A = jnp.asarray(-rng.uniform(0.5, 2.0, size=(h,)), jnp.float32)
+    B = jnp.asarray(rng.normal(size=(b, s, g, n)), jnp.float32)
+    C = jnp.asarray(rng.normal(size=(b, s, g, n)), jnp.float32)
+    from repro.kernels.ops import ssd
+    y1, f1 = ssd(x, dt, A, B, C, chunk=16, impl="ref")
+    y2, f2 = R.ssd_sequential_ref(x, dt, A, B, C)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=5e-4)
+    np.testing.assert_allclose(np.asarray(f1), np.asarray(f2), atol=5e-4)
+
+
+def test_stream_pipeline_fused_vs_staged(rng):
+    fns = (jnp.tanh, lambda x: x * 2.0, jnp.abs, jnp.sqrt)
+    x = jnp.asarray(np.abs(rng.normal(size=(100, 300))), jnp.float32)
+    fused = stream_pipeline(x, fns, tile=(32, 128), interpret=True)
+    staged = stream_pipeline_staged(x, fns)
+    ref = x
+    for f in fns:
+        ref = f(ref)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(ref),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(staged), np.asarray(ref),
+                               atol=1e-6)
+
+
+def test_chunked_attention_xla_matches_ref(rng):
+    """The XLA streaming form (used by the dry-run) == naive oracle."""
+    from repro.models.layers import attention_xla
+    B, Hq, Hkv, S, D = 2, 4, 2, 512, 64
+    q = jnp.asarray(rng.normal(size=(B, Hq, S, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, Hkv, S, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, Hkv, S, D)), jnp.float32)
+    o1 = attention_xla(q, k, v, causal=True, chunk=128)
+    o2 = R.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-4)
+    o3 = attention_xla(q, k, v, causal=True, chunk=128, unroll=True)
+    np.testing.assert_allclose(np.asarray(o3), np.asarray(o2), atol=2e-4)

@@ -1,0 +1,161 @@
+"""Per-architecture smoke tests (reduced configs) + consistency.
+
+Every assigned arch: one forward/train step on CPU asserting output
+shapes + finite values, and teacher-forced decode == full forward.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config, get_smoke
+from repro.models import model as M
+from repro.models.config import SHAPES
+
+RNG = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, B=2, S=24):
+    toks = jax.random.randint(RNG, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "labels": toks}
+    if cfg.family == "encdec":
+        batch["enc_embeds"] = jax.random.normal(
+            RNG, (B, cfg.n_frontend_tokens, cfg.d_model), jnp.float32)
+    if cfg.family == "vlm":
+        batch["extra_embeds"] = jax.random.normal(
+            RNG, (B, cfg.n_frontend_tokens, cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step(arch):
+    cfg = get_smoke(arch)
+    params = M.init(cfg, RNG)
+    batch = _batch(cfg)
+    (loss, metrics), grads = jax.value_and_grad(
+        M.loss_fn, has_aux=True)(params, cfg, batch)
+    assert np.isfinite(float(loss))
+    gnorm = sum(float(jnp.sum(g.astype(jnp.float32) ** 2))
+                for g in jax.tree.leaves(grads)) ** 0.5
+    assert np.isfinite(gnorm) and gnorm > 0
+    # logits shape check via forward
+    logits, _ = M.forward(params, cfg, batch["tokens"],
+                          extra_embeds=batch.get("extra_embeds"),
+                          enc_embeds=batch.get("enc_embeds"))
+    S_total = batch["tokens"].shape[1] + (
+        cfg.n_frontend_tokens if cfg.family == "vlm" else 0)
+    assert logits.shape == (2, S_total, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_serve_path(arch):
+    cfg = dataclasses.replace(get_smoke(arch), capacity_factor=8.0)
+    params = M.init(cfg, RNG)
+    B, S = 2, 16
+    batch = _batch(cfg, B, S)
+    toks = batch["tokens"]
+    logits_full, _ = M.forward(params, cfg, toks,
+                               extra_embeds=batch.get("extra_embeds"),
+                               enc_embeds=batch.get("enc_embeds"))
+    off = cfg.n_frontend_tokens if cfg.family == "vlm" else 0
+    cache = M.init_cache(cfg, B, 48, dtype=jnp.float32)
+    lg, cache = M.prefill(params, cfg, toks[:, :8], cache,
+                          enc_embeds=batch.get("enc_embeds"),
+                          extra_embeds=batch.get("extra_embeds"))
+    errs = []
+    if cfg.family != "vlm":
+        errs.append(float(jnp.abs(lg - logits_full[:, off + 7]).max()))
+    for t in range(8, S):
+        lg, cache = M.decode_step(params, cfg, toks[:, t], cache)
+        if cfg.family != "vlm":
+            errs.append(float(jnp.abs(lg - logits_full[:, off + t]).max()))
+    if cfg.family == "vlm":
+        # vlm prefill includes the vision prefix; check finiteness only
+        assert bool(jnp.isfinite(lg).all())
+    else:
+        assert max(errs) < 1e-3, f"decode drift {max(errs)}"
+
+
+@pytest.mark.parametrize("arch", ["granite_3_2b", "qwen3_moe_235b_a22b",
+                                  "mamba2_2p7b", "zamba2_1p2b",
+                                  "whisper_base"])
+def test_scan_vs_unrolled(arch):
+    """The calibration (unrolled) path computes the same function."""
+    cfg = dataclasses.replace(get_smoke(arch), capacity_factor=8.0)
+    params = M.init(cfg, RNG)
+    batch = _batch(cfg)
+    l1, _ = M.loss_fn(params, cfg, batch)
+    l2, _ = M.loss_fn(params, dataclasses.replace(cfg, scan_layers=False),
+                      batch)
+    assert abs(float(l1) - float(l2)) < 1e-5
+
+
+def test_full_configs_match_assignment():
+    """The exact assigned architecture hyperparameters."""
+    c = get_config("qwen3-moe-235b-a22b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size, c.n_experts, c.experts_per_token) == \
+        (94, 4096, 64, 4, 1536, 151936, 128, 8)
+    c = get_config("qwen1.5-32b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size, c.qkv_bias) == \
+        (64, 5120, 40, 40, 27392, 152064, True)
+    c = get_config("granite-20b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size) == (52, 6144, 48, 1, 24576, 49152)
+    c = get_config("mamba2-2.7b")
+    assert (c.n_layers, c.d_model, c.ssm_state, c.vocab_size) == \
+        (64, 2560, 128, 50280)
+    c = get_config("zamba2-1.2b")
+    assert (c.n_layers, c.d_model, c.ssm_state, c.vocab_size) == \
+        (38, 2048, 64, 32000)
+    c = get_config("whisper-base")
+    assert (c.n_layers, c.n_enc_layers, c.d_model, c.n_heads, c.d_ff,
+            c.vocab_size) == (6, 6, 512, 8, 2048, 51865)
+    c = get_config("internvl2-26b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size) == (48, 6144, 48, 8, 16384, 92553)
+    c = get_config("granite-moe-3b-a800m")
+    assert (c.n_layers, c.d_model, c.n_experts, c.experts_per_token) == \
+        (32, 1536, 40, 8)
+    c = get_config("granite-3-2b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff) == \
+        (40, 2048, 32, 8, 8192)
+    c = get_config("minicpm3-4b")
+    assert (c.n_layers, c.d_model, c.use_mla, c.kv_lora_rank) == \
+        (62, 2560, True, 256)
+
+
+def test_param_counts_in_range():
+    """Analytic parameter counts should be near the advertised sizes."""
+    expect = {"qwen3-moe-235b-a22b": (200e9, 245e9),
+              "qwen1.5-32b": (30e9, 38e9),
+              "mamba2-2.7b": (2.4e9, 3.0e9),
+              "zamba2-1.2b": (0.9e9, 1.4e9),
+              "minicpm3-4b": (3.5e9, 4.8e9),
+              "whisper-base": (0.06e9, 0.12e9)}
+    for name, (lo, hi) in expect.items():
+        n = get_config(name).n_params()
+        assert lo <= n <= hi, (name, n)
+
+
+def test_mla_cache_is_compressed():
+    cfg = get_config("minicpm3-4b")
+    cache = jax.eval_shape(lambda: M.init_cache(cfg, 1, 1024))
+    per_tok = (cache["attn"]["c_kv"].shape[-1]
+               + cache["attn"]["k_rope"].shape[-1])
+    full = 2 * cfg.n_heads * cfg.hd      # standard MHA cache
+    assert per_tok * 17 < full            # ~17.8x smaller
+
+
+def test_moe_capacity_drops_are_bounded():
+    """With cf=1.25 some tokens drop, but the layer stays finite and
+    the residual carries them."""
+    cfg = get_smoke("qwen3_moe_235b_a22b")   # cf = 1.25 default
+    params = M.init(cfg, RNG)
+    batch = _batch(cfg, B=4, S=32)
+    loss, _ = M.loss_fn(params, cfg, batch)
+    assert np.isfinite(float(loss))

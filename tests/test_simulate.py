@@ -1,0 +1,57 @@
+"""FIFO-pipeline latency model: reproduces the paper's Fig. 1 law."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import TaskTiming, analytic_latency, simulate_pipeline
+
+
+def test_fig1_five_tasks():
+    """5 matched tasks: dataflow ~= 5x faster (paper Fig. 1)."""
+    tasks = [TaskTiming(f"t{i}", ii=1.0, fill=10.0) for i in range(5)]
+    r = analytic_latency(tasks, 1 << 20)
+    assert 4.9 < r["speedup"] <= 5.0
+
+
+def test_bottleneck_task_dominates():
+    tasks = [TaskTiming("fast", ii=1.0), TaskTiming("slow", ii=4.0),
+             TaskTiming("fast2", ii=1.0)]
+    r = analytic_latency(tasks, 10_000)
+    # pipeline drains at the slow task's rate
+    assert abs(r["dataflow"] - (4.0 * 10_000 + 24.0)) < 1.0
+
+
+def test_simulation_matches_analytic_steady_state():
+    tasks = [TaskTiming(f"t{i}", ii=float(ii), fill=8.0)
+             for i, ii in enumerate([1, 2, 1, 3])]
+    n = 4096
+    sim = simulate_pipeline(tasks, n, depth=2)
+    ana = analytic_latency(tasks, n)
+    assert abs(sim["dataflow_sim"] - ana["dataflow"]) / ana["dataflow"] < 0.05
+    assert abs(sim["steady_rate"] - 3.0) < 0.05
+
+
+@given(st.lists(st.floats(0.5, 4.0), min_size=2, max_size=6),
+       st.integers(256, 2048))
+@settings(max_examples=20, deadline=None)
+def test_dataflow_never_slower_and_bounded(iis, n):
+    tasks = [TaskTiming(f"t{i}", ii=v, fill=4.0) for i, v in enumerate(iis)]
+    sim = simulate_pipeline(tasks, n, depth=2)
+    ana = analytic_latency(tasks, n)
+    # pipelined <= sequential; >= the slowest-stage bound
+    assert sim["dataflow_sim"] <= ana["sequential"] * 1.01
+    assert sim["dataflow_sim"] >= max(iis) * n - 1e-6
+
+
+def test_depth_one_still_progresses():
+    tasks = [TaskTiming("a", ii=1.0), TaskTiming("b", ii=1.0)]
+    r = simulate_pipeline(tasks, 1024, depth=1)
+    assert r["dataflow_sim"] < r["sequential"]
+
+
+def test_jitter_absorbed_by_fifo():
+    """Stalls in one task are absorbed while FIFOs have data (paper
+    Section II-A) — jittered pipeline stays near the jitter-free rate
+    plus the injected jitter itself, far below the sequential bound."""
+    tasks = [TaskTiming(f"t{i}", ii=1.0) for i in range(4)]
+    jit = simulate_pipeline(tasks, 4096, depth=2, jitter=0.05, seed=1)
+    assert jit["dataflow_sim"] < 0.5 * jit["sequential"]

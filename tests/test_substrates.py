@@ -1,0 +1,194 @@
+"""Optimizer, data pipeline, checkpointing, fault machinery."""
+import os
+import shutil
+import signal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint.checkpointer import (Checkpointer, latest_step,
+                                           restore_pytree, save_pytree)
+from repro.data.pipeline import SyntheticLM
+from repro.optim.adamw import (AdamWConfig, adamw_apply, adamw_init,
+                               clip_by_global_norm, lr_schedule)
+from repro.optim.compression import compress, decompress, ef_init, \
+    ef_roundtrip
+from repro.runtime.fault import (HeartbeatRegistry, PreemptionGuard,
+                                 StragglerMonitor)
+
+
+# ----------------------------------------------------------------------
+# optimizer
+# ----------------------------------------------------------------------
+def test_adamw_converges_quadratic():
+    cfg = AdamWConfig(lr_peak=0.1, warmup_steps=5, decay_steps=200,
+                      weight_decay=0.0)
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = adamw_init(params)
+    target = jnp.array([1.0, 2.0])
+    for _ in range(200):
+        grads = {"w": (params["w"] - target)}
+        params, state, _ = adamw_apply(cfg, params, grads, state)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target),
+                               atol=0.05)
+
+
+def test_lr_schedule_shape():
+    cfg = AdamWConfig(lr_peak=1e-3, lr_min=1e-4, warmup_steps=10,
+                      decay_steps=100)
+    lrs = [float(lr_schedule(cfg, jnp.asarray(s))) for s in range(120)]
+    assert lrs[0] < lrs[9] <= 1e-3 + 1e-9
+    assert abs(lrs[10] - 1e-3) < 1e-4
+    assert lrs[115] <= lrs[50]
+    assert lrs[-1] >= 1e-4 - 1e-9
+
+
+def test_clipping():
+    g = {"a": jnp.full((10,), 100.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) > 100
+    n2 = float(jnp.linalg.norm(clipped["a"]))
+    assert abs(n2 - 1.0) < 1e-4
+
+
+# ----------------------------------------------------------------------
+# gradient compression (error feedback)
+# ----------------------------------------------------------------------
+def test_compress_roundtrip_error_bounded(rng):
+    g = jnp.asarray(rng.normal(size=(256,)), jnp.float32)
+    q, s, err = compress(g, jnp.zeros_like(g))
+    rec = decompress(q, s)
+    assert float(jnp.abs(rec - g).max()) <= float(s) * 0.5 + 1e-6
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_error_feedback_is_unbiased_over_time(seed):
+    """Sum of transmitted values ~= sum of true gradients (EF property)."""
+    rng = np.random.default_rng(seed)
+    true = jnp.asarray(rng.normal(size=(64,)), jnp.float32)
+    err = {"g": jnp.zeros((64,), jnp.float32)}
+    sent = jnp.zeros((64,), jnp.float32)
+    T = 50
+    for _ in range(T):
+        out, err = ef_roundtrip({"g": true}, err)
+        sent = sent + out["g"]
+    drift = float(jnp.abs(sent / T - true).max())
+    assert drift < 5e-2       # residual error bounded by one quantum
+
+
+# ----------------------------------------------------------------------
+# data pipeline
+# ----------------------------------------------------------------------
+def test_data_deterministic_and_resumable():
+    p1 = SyntheticLM(vocab_size=100, seq_len=16, global_batch=4, seed=7)
+    p2 = SyntheticLM(vocab_size=100, seq_len=16, global_batch=4, seed=7)
+    for step in (0, 5, 1000):
+        b1, b2 = p1.batch(step), p2.batch(step)
+        np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert not np.array_equal(p1.batch(1)["tokens"], p1.batch(2)["tokens"])
+
+
+def test_data_host_slicing_partitions_batch():
+    full = SyntheticLM(vocab_size=100, seq_len=8, global_batch=8, seed=1)
+    lo = SyntheticLM(vocab_size=100, seq_len=8, global_batch=8, seed=1,
+                     host_lo=0, host_hi=4)
+    assert lo.batch(3)["tokens"].shape[0] == 4
+    assert full.batch(3)["tokens"].shape[0] == 8
+
+
+def test_data_is_learnable_next_token():
+    b = SyntheticLM(vocab_size=97, seq_len=32, global_batch=2,
+                    seed=0).batch(0)
+    # labels are tokens shifted by one (next-token prediction)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+# ----------------------------------------------------------------------
+# checkpointing
+# ----------------------------------------------------------------------
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(10, dtype=jnp.float32),
+            "b": {"c": jnp.ones((3, 4), jnp.bfloat16),
+                  "step": jnp.asarray(7, jnp.int32)}}
+    save_pytree(tree, str(tmp_path), 7)
+    like = jax.eval_shape(lambda: tree)
+    out = restore_pytree(like, str(tmp_path), 7)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_checkpoint_detects_corruption(tmp_path):
+    tree = {"w": jnp.arange(100, dtype=jnp.float32)}
+    d = save_pytree(tree, str(tmp_path), 1)
+    victim = [f for f in os.listdir(d) if f.endswith(".npy")][0]
+    arr = np.load(os.path.join(d, victim))
+    arr[0] += 1
+    np.save(os.path.join(d, victim), arr)
+    with pytest.raises(IOError, match="corruption"):
+        restore_pytree(jax.eval_shape(lambda: tree), str(tmp_path), 1)
+
+
+def test_checkpoint_retention_and_async(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    tree = {"w": jnp.zeros((8,))}
+    for s in (1, 2, 3, 4):
+        ck.save(tree, s)
+    ck.wait()
+    steps = sorted(int(n.split("_")[1]) for n in os.listdir(tmp_path)
+                   if n.startswith("step_"))
+    assert steps == [3, 4]
+    assert ck.latest_step() == 4
+
+
+def test_checkpoint_atomicity_no_partial_dirs(tmp_path):
+    """A completed save never coexists with tmp litter."""
+    ck = Checkpointer(str(tmp_path), keep=3)
+    ck.save({"w": jnp.ones((4,))}, 5, blocking=True)
+    assert latest_step(str(tmp_path)) == 5
+    assert not [n for n in os.listdir(tmp_path) if ".tmp-" in n]
+
+
+# ----------------------------------------------------------------------
+# fault machinery
+# ----------------------------------------------------------------------
+def test_straggler_monitor_flags_slow_host():
+    mon = StragglerMonitor(n_hosts=8, patience=3)
+    flagged = []
+    for t in range(10):
+        times = np.ones(8)
+        times[3] = 3.0          # host 3 is persistently 3x slower
+        flagged = mon.observe(times)
+    assert flagged == [3]
+
+
+def test_straggler_monitor_ignores_transients():
+    mon = StragglerMonitor(n_hosts=4, patience=3)
+    for t in range(10):
+        times = np.ones(4)
+        if t == 4:
+            times[1] = 5.0      # single spike
+        assert mon.observe(times) == []
+
+
+def test_heartbeats():
+    clock = [0.0]
+    reg = HeartbeatRegistry(n_hosts=3, deadline_s=10,
+                            clock=lambda: clock[0])
+    clock[0] = 5.0
+    reg.beat(0)
+    reg.beat(2)
+    clock[0] = 12.0
+    assert reg.dead_hosts() == [1]
+    assert reg.survivors() == [0, 2]
+
+
+def test_preemption_guard_catches_sigterm():
+    with PreemptionGuard() as g:
+        assert not g.preempted
+        os.kill(os.getpid(), signal.SIGTERM)
+        assert g.preempted
