@@ -21,8 +21,8 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import wall_us
-from repro.core import compile_graph
 from repro.core.apps import APPS
+from repro.core.compiler import compile_graph
 from repro.core.vectorize import V5E
 
 H = W = 1024

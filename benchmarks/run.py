@@ -24,6 +24,28 @@ MODULES = [
 ]
 
 
+def smoke() -> None:
+    """Import every benchmark module and check its contract (--smoke).
+
+    Keeps the scripts import-clean in CI without paying for the full
+    measurement sweep.
+    """
+    import importlib
+    failed = []
+    for mod_name in MODULES:
+        try:
+            mod = importlib.import_module(mod_name)
+            assert callable(getattr(mod, "run", None)), \
+                f"{mod_name} has no run()"
+            print(f"{mod_name}: import ok")
+        except Exception:
+            failed.append(mod_name)
+            traceback.print_exc()
+    if failed:
+        raise SystemExit(f"smoke failed for {failed}")
+    print(f"smoke ok: {len(MODULES)} benchmark modules import clean")
+
+
 def main() -> None:
     import importlib
     all_rows = []
@@ -50,4 +72,7 @@ def main() -> None:
 
 
 if __name__ == "__main__":
-    main()
+    if "--smoke" in sys.argv:
+        smoke()
+    else:
+        main()

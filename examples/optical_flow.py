@@ -1,7 +1,8 @@
 """Lucas-Kanade optical flow — the paper's Fig. 4 16-stage pipeline.
 
 Builds the full LK dataflow graph (derivatives, products, windowed
-sums, 2x2 solve), fuses it into one streaming kernel, and estimates
+sums, 2x2 solve), canonicalizes + convex-fuses it into one streaming
+kernel through `repro.core.compiler.compile_graph`, and estimates
 motion on a synthetic translating pattern.  Demonstrates memory-bundle
 assignment across the parallel DAG paths (the paper's mem1..4).
 
@@ -20,10 +21,11 @@ def main():
     H, W = 256, 512
     g = optical_flow_lk(H, W)
     sched = build_schedule(g)
-    n_split = sum(1 for s in g.stages if s.kind == "split")
-    print(f"LK graph: {len(g.stages)} tasks "
-          f"({len(g.stages) - n_split} compute + {n_split} splits), "
-          f"fused into {len(sched.groups)} kernel(s)")
+    n_split = sum(1 for s in sched.graph.stages if s.kind == "split")
+    print(f"LK graph: {len(sched.graph.stages)} tasks "
+          f"({len(sched.graph.stages) - n_split} compute + {n_split} "
+          f"splits), fused into {len(sched.groups)} kernel(s) by convex "
+          f"DAG fusion")
     print("memory bundles:",
           {c.name: f"mem{b}" for c, b in sched.bundles.items()})
 

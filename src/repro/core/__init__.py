@@ -2,24 +2,32 @@
 
 Layers (see DESIGN.md §3):
   graph.py     — dataflow-graph extraction & validation       (C1)
-  schedule.py  — toposort, fusion groups, halo, bundles        (C2, C3c)
+  transform.py — canonicalization pass pipeline               (C1b)
+  schedule.py  — toposort, convex DAG fusion, halo, bundles    (C2, C3c)
   vectorize.py — tile / vector-factor selection                (C3b)
   fusion.py    — top-level kernel generation (pallas/xla)      (C2, C3a)
   host.py      — host-code generation (launcher, buffers)      (C4)
+  compiler.py  — the driver: canonicalize→validate→partition→lower
   simulate.py  — FIFO pipeline latency model (paper Fig. 1)
 """
 from repro.core.graph import (Channel, ChannelContractError, CycleError,
                               DataflowGraph, GraphError, Stage)
+from repro.core.transform import (AutoSplitInsertion, DeadChannelElimination,
+                                  Pass, PassPipeline, PointFusion,
+                                  default_pipeline)
 from repro.core.schedule import FusionGroup, Schedule, build_schedule
 from repro.core.fusion import BACKENDS, lower_graph, lower_group
-from repro.core.host import CompiledApp, compile_graph
+from repro.core.host import CompiledApp, build_host_app
+from repro.core.compiler import compile_graph
 from repro.core.simulate import TaskTiming, analytic_latency, simulate_pipeline
 from repro.core.vectorize import TPUSpec, V5E, choose_tile
 
 __all__ = [
     "Channel", "ChannelContractError", "CycleError", "DataflowGraph",
-    "GraphError", "Stage", "FusionGroup", "Schedule", "build_schedule",
+    "GraphError", "Stage", "Pass", "PassPipeline", "AutoSplitInsertion",
+    "DeadChannelElimination", "PointFusion", "default_pipeline",
+    "FusionGroup", "Schedule", "build_schedule",
     "BACKENDS", "lower_graph", "lower_group", "CompiledApp",
-    "compile_graph", "TaskTiming", "analytic_latency", "simulate_pipeline",
-    "TPUSpec", "V5E", "choose_tile",
+    "build_host_app", "compile_graph", "TaskTiming", "analytic_latency",
+    "simulate_pipeline", "TPUSpec", "V5E", "choose_tile",
 ]

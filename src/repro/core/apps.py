@@ -19,7 +19,7 @@ import numpy as np
 
 from repro.core.graph import DataflowGraph
 
-__all__ = ["APPS", "build_app"]
+__all__ = ["APPS", "build_app", "compile_app"]
 
 
 # ----------------------------------------------------------------------
@@ -278,3 +278,10 @@ def build_app(name: str, h: int = 1024, w: int = 1024) -> DataflowGraph:
     if name not in APPS:
         raise KeyError(f"unknown app {name!r}; choose from {sorted(APPS)}")
     return APPS[name][0](h, w)
+
+
+def compile_app(name: str, h: int = 1024, w: int = 1024,
+                backend: str = "pallas", **kw):
+    """Build + compile a Table-I app through the full pass pipeline."""
+    from repro.core.compiler import compile_graph
+    return compile_graph(build_app(name, h, w), backend=backend, **kw)

@@ -1,0 +1,64 @@
+"""The pass-based compiler driver: validate -> canonicalize -> partition
+-> lower, behind one entry point.
+
+This is the façade the rest of the repo (examples, benchmarks, DSL
+apps) builds on.  The phases:
+
+1. **canonicalize** — run the :mod:`repro.core.transform` pass
+   pipeline (auto-split insertion, dead-channel elimination, point
+   fusion) so the programmer may write the natural non-canonical
+   program; ``strict=True`` skips this and enforces the paper's
+   explicit canonical form instead (multi-reader channels raise
+   :class:`~repro.core.graph.ChannelContractError`),
+2. **validate** — single-writer/single-reader contract + acyclicity,
+3. **partition** — convex-subgraph DAG fusion into streaming kernels
+   (:func:`repro.core.schedule.build_schedule`),
+4. **lower** — per-group kernel generation for the chosen backend
+   (:func:`repro.core.fusion.lower_graph`) plus generated host code
+   (:func:`repro.core.host.build_host_app`).
+
+Pass diagnostics ride along on ``Schedule.diagnostics`` and show up in
+``Schedule.describe()`` / ``CompiledApp.schedule.describe()``.
+"""
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+from jax.sharding import Mesh
+
+from repro.core.fusion import lower_graph
+from repro.core.graph import DataflowGraph
+from repro.core.host import CompiledApp, build_host_app
+from repro.core.schedule import Schedule, build_schedule
+from repro.core.transform import Pass, PassPipeline
+from repro.core.vectorize import TPUSpec, V5E
+
+__all__ = ["compile_graph"]
+
+
+def compile_graph(graph: DataflowGraph, backend: str = "pallas", *,
+                  strict: bool = False, canonicalize: bool = True,
+                  passes: Sequence[Pass] | PassPipeline | None = None,
+                  mesh: Mesh | None = None,
+                  data_axis: str | Sequence[str] = "data",
+                  donate: Sequence[str] = (), spec: TPUSpec = V5E,
+                  vector_factor: int = 1, interpret: bool = True,
+                  jit: bool = True) -> CompiledApp:
+    """Compile a dataflow graph end-to-end into a :class:`CompiledApp`.
+
+    One source program, any backend — ``backend`` is one of
+    ``repro.core.fusion.BACKENDS`` (``xla``, ``xla_staged``,
+    ``pallas``).  ``strict=True`` disables the canonicalization
+    pipeline and rejects non-canonical graphs exactly like the seed
+    validator did; ``passes`` substitutes a custom pass list for the
+    default pipeline.  ``mesh``/``data_axis``/``donate`` configure the
+    generated host launcher (see :mod:`repro.core.host`).
+    """
+    sched: Schedule = build_schedule(
+        graph, canonicalize=canonicalize, strict=strict, passes=passes,
+        spec=spec, vector_factor=vector_factor)
+    run, sched = lower_graph(sched.graph, backend, schedule=sched,
+                             spec=spec, vector_factor=vector_factor,
+                             interpret=interpret)
+    return build_host_app(sched, run, backend=backend, mesh=mesh,
+                          data_axis=data_axis, donate=donate, jit=jit)

@@ -86,8 +86,8 @@ def lower_group_pallas(group: FusionGroup, spec: TPUSpec = V5E,
     in_specs = []
     for ch in group.inputs:
         hy, hx = group.halo.get(ch, (0, 0))
-        in_specs.append(pl.BlockSpec(
-            (pl.Element(th + 2 * hy), pl.Element(tw + 2 * hx)),
+        in_specs.append(_element_block_spec(
+            (th + 2 * hy, tw + 2 * hx),
             functools.partial(_in_index, th=th, tw=tw)))
     out_specs = [pl.BlockSpec((th, tw), lambda i, j: (i, j))
                  for _ in group.outputs]
@@ -118,6 +118,18 @@ def lower_group_pallas(group: FusionGroup, spec: TPUSpec = V5E,
         return {ch: o[:H, :W] for ch, o in zip(group.outputs, outs)}
 
     return run
+
+
+def _element_block_spec(shape: tuple[int, int], index_map) -> pl.BlockSpec:
+    """Element-indexed BlockSpec across the pallas API generations.
+
+    jax >= 0.5 spells it ``pl.Element(n)`` per dimension; jax 0.4.x
+    spells the same semantics (index map returns element offsets, not
+    block indices) ``indexing_mode=pl.Unblocked()``.
+    """
+    if hasattr(pl, "Element"):
+        return pl.BlockSpec(tuple(pl.Element(s) for s in shape), index_map)
+    return pl.BlockSpec(shape, index_map, indexing_mode=pl.Unblocked())
 
 
 def _in_index(i, j, *, th, tw):
@@ -218,15 +230,23 @@ def lower_group(group: FusionGroup, backend: str, spec: TPUSpec = V5E,
 
 def lower_graph(graph: DataflowGraph, backend: str = "pallas",
                 schedule: Schedule | None = None, spec: TPUSpec = V5E,
-                vector_factor: int = 1, interpret: bool = True,
+                vector_factor: int = 1, interpret: bool = True, *,
+                canonicalize: bool = True, strict: bool = False,
                 ) -> tuple[Callable, Schedule]:
     """Lower a whole dataflow graph; returns ``(run, schedule)``.
 
     ``run`` maps ``{input_name: array} -> {output_name: array}`` and is
     jit-compatible.  One source program, any backend — the paper's
-    portability claim (Fig. 8/9) maps to ``backend=`` here.
+    portability claim (Fig. 8/9) maps to ``backend=`` here.  Unless a
+    pre-built ``schedule`` is passed, the graph first goes through the
+    canonicalization pass pipeline (``strict=True`` to enforce the
+    explicit canonical form instead; see
+    :func:`repro.core.schedule.build_schedule`).
     """
-    sched = schedule or build_schedule(graph)
+    sched = schedule or build_schedule(graph, canonicalize=canonicalize,
+                                       strict=strict, spec=spec,
+                                       vector_factor=vector_factor)
+    graph = sched.graph
     fns = [lower_group(g, backend, spec, vector_factor, interpret)
            for g in sched.groups]
 

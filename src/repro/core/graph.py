@@ -14,6 +14,7 @@ fused streaming Pallas kernel or an XLA chain.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 from typing import Any, Callable, Sequence
 
@@ -297,10 +298,10 @@ class DataflowGraph:
         indeg: dict[Stage, int] = {}
         for st in self.stages:
             indeg[st] = sum(1 for ch in st.inputs if ch.producer is not None)
-        ready = [st for st in self.stages if indeg[st] == 0]
+        ready = collections.deque(st for st in self.stages if indeg[st] == 0)
         order: list[Stage] = []
         while ready:
-            st = ready.pop(0)
+            st = ready.popleft()
             order.append(st)
             for ch in st.outputs:
                 for consumer in ch.consumers:

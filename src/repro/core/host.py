@@ -4,9 +4,12 @@ The paper generates all XRT boilerplate (context, buffers, ``setArg``,
 kernel launch, H2D/D2H copies) from the same single source as the
 device code.  The TPU analogue of "host code" is the *launcher*: buffer
 placement & sharding, donation, the jitted step function, and the
-compile artifacts.  :func:`compile_graph` derives all of it from the
-dataflow graph — the user never writes glue code, and host/device can
-never drift apart.
+compile artifacts.  :func:`build_host_app` derives all of it from the
+scheduled dataflow graph — the user never writes glue code, and
+host/device can never drift apart.  The user-facing entry point is
+:func:`repro.core.compiler.compile_graph`, which runs the full
+pipeline (canonicalize -> validate -> partition -> lower) and finishes
+here.
 
 For fidelity (and debuggability) :meth:`CompiledApp.host_program`
 renders the generated launch plan as an XRT-style listing, mirroring
@@ -22,12 +25,10 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.fusion import lower_graph
 from repro.core.graph import DataflowGraph
 from repro.core.schedule import Schedule
-from repro.core.vectorize import TPUSpec, V5E
 
-__all__ = ["CompiledApp", "compile_graph"]
+__all__ = ["CompiledApp", "build_host_app"]
 
 
 @dataclasses.dataclass
@@ -63,6 +64,8 @@ class CompiledApp:
     # -- introspection -------------------------------------------------
     def cost(self) -> dict[str, float]:
         ca = self.compiled.cost_analysis() or {}
+        if isinstance(ca, (list, tuple)):     # jax < 0.5: per-computation list
+            ca = ca[0] if ca else {}
         return {
             "flops": float(ca.get("flops", 0.0)),
             "bytes": sum(float(v) for k, v in ca.items()
@@ -110,22 +113,23 @@ class CompiledApp:
         return "\n".join(lines)
 
 
-def compile_graph(graph: DataflowGraph, backend: str = "pallas",
-                  mesh: Mesh | None = None,
-                  data_axis: str | Sequence[str] = "data",
-                  donate: Sequence[str] = (), spec: TPUSpec = V5E,
-                  vector_factor: int = 1, interpret: bool = True,
-                  jit: bool = True) -> CompiledApp:
-    """Generate device kernels + host launcher from a dataflow graph.
+def build_host_app(sched: Schedule, run: Callable,
+                   *, backend: str = "pallas", mesh: Mesh | None = None,
+                   data_axis: str | Sequence[str] = "data",
+                   donate: Sequence[str] = (),
+                   jit: bool = True) -> CompiledApp:
+    """Generate the host launcher around an already-lowered graph.
 
-    When ``mesh`` is given, every 2-D plane is row-sharded over
-    ``data_axis`` (a TPU "memory bundle" at the cluster scale: parallel
-    DAG paths live in different per-device HBM shards and transfer
-    concurrently).  Donation lets an output reuse an input's HBM.
+    ``run`` is the whole-graph function produced by
+    :func:`repro.core.fusion.lower_graph`; the graph is taken from the
+    schedule (post-canonicalization) so launcher and kernels can never
+    disagree about the I/O signature.  When ``mesh`` is given, every
+    2-D plane is row-sharded over ``data_axis`` (a TPU "memory bundle"
+    at the cluster scale: parallel DAG paths live in different
+    per-device HBM shards and transfer concurrently).  Donation lets
+    an output reuse an input's HBM.
     """
-    run, sched = lower_graph(graph, backend, spec=spec,
-                             vector_factor=vector_factor,
-                             interpret=interpret)
+    graph = sched.graph
     input_names = [c.name for c in graph.graph_inputs]
     output_names = [c.name for c in graph.graph_outputs]
 

@@ -1,21 +1,29 @@
-"""Scheduling: fusion groups, halo accumulation, channel depths, bundles.
+"""Scheduling: convex DAG fusion, halo accumulation, depths, bundles.
 
 This is FLOWER contribution C2 (top-level kernel generation) plus C3c
-(memory-bundle assignment).  Given a validated :class:`DataflowGraph`,
-the scheduler
+(memory-bundle assignment).  Given a :class:`DataflowGraph`, the
+scheduler
 
-1. topologically sorts the stages (write-before-read order),
-2. partitions them into *fusion groups* — maximal chains of
-   tile-streamable stages (point / pointN / stencil / split) that will
-   become ONE fused streaming kernel (the paper's top-level kernel with
-   ``#pragma HLS DATAFLOW``); ``custom`` and ``reduce`` stages are
-   group-breaking and run as their own kernels,
-3. computes the *cumulative halo* each channel must carry so that
+1. canonicalizes the graph through the pass pipeline
+   (:mod:`repro.core.transform`) unless ``strict=True``,
+2. topologically sorts the stages (write-before-read order),
+3. partitions them into *fusion groups* by **convex-subgraph DAG
+   fusion**: every tile-streamable stage starts in its own group and
+   groups are merged pairwise — best latency win first, as scored by
+   :func:`repro.core.simulate.analytic_latency` — as long as the union
+   stays convex (no path leaves the group and re-enters, so the fused
+   kernel never deadlocks on an external dependency) and its
+   double-buffered working set still fits VMEM
+   (:func:`repro.core.vectorize.choose_tile` is the budget oracle).
+   Diamond- and branch-shaped DAGs therefore collapse into ONE fused
+   streaming kernel instead of fragmenting into per-branch chains;
+   ``custom`` and ``reduce`` stages stay group-breaking singletons,
+4. computes the *cumulative halo* each channel must carry so that
    downstream stencils have their windows available inside the fused
    kernel (the line-buffer analysis),
-4. assigns memory bundles to graph I/O channels so parallel DAG paths
+5. assigns memory bundles to graph I/O channels so parallel DAG paths
    use distinct HBM buffers (paper Fig. 4: ``mem1..4``),
-5. budgets VMEM: each live channel inside a group costs
+6. budgets VMEM: each live channel inside a group costs
    ``tile_bytes * depth`` (depth-2 FIFO == double buffering).
 """
 from __future__ import annotations
@@ -26,11 +34,16 @@ from typing import Sequence
 import numpy as np
 
 from repro.core.graph import Channel, DataflowGraph, GraphError, Stage
+from repro.core.simulate import TaskTiming, analytic_latency
+from repro.core.transform import Pass, PassPipeline, default_pipeline
 
 __all__ = ["FusionGroup", "Schedule", "build_schedule"]
 
 #: stage kinds that can be fused into one streaming kernel
 FUSIBLE_KINDS = frozenset({"point", "pointN", "stencil", "split"})
+
+#: items used by the merge cost model (plane size is tile-agnostic here)
+_COST_ITEMS = 1 << 20
 
 
 @dataclasses.dataclass
@@ -91,6 +104,8 @@ class Schedule:
     #: bundle id per graph-I/O channel (paper: AXI bundles)
     bundles: dict[Channel, int]
     n_bundles: int
+    #: human-readable log from the pass pipeline + the fusion search
+    diagnostics: list[str] = dataclasses.field(default_factory=list)
 
     def describe(self) -> str:
         lines = [f"schedule for {self.graph.name!r}: "
@@ -104,60 +119,203 @@ class Schedule:
                          f"fifo={[c.name for c in g.internal]}")
         lines.append("  bundles: " + ", ".join(
             f"{c.name}->mem{b}" for c, b in self.bundles.items()))
+        if self.diagnostics:
+            lines.append("  passes:")
+            lines.extend(f"    {d}" for d in self.diagnostics)
         return "\n".join(lines)
 
 
-def build_schedule(graph: DataflowGraph, n_bundles: int = 4) -> Schedule:
+def build_schedule(graph: DataflowGraph, n_bundles: int = 4, *,
+                   canonicalize: bool = True, strict: bool = False,
+                   passes: Sequence[Pass] | PassPipeline | None = None,
+                   spec=None, vector_factor: int = 1) -> Schedule:
+    """Canonicalize, validate and partition ``graph`` into fusion groups.
+
+    ``strict=True`` skips canonicalization and enforces the paper's
+    explicit canonical form (multi-reader channels raise).  ``passes``
+    overrides the default pipeline; ``spec``/``vector_factor`` feed the
+    VMEM feasibility check of the fusion search (default: TPU v5e).
+    """
+    diagnostics: list[str] = []
+    if canonicalize and not strict:
+        pipeline = passes if isinstance(passes, PassPipeline) else (
+            PassPipeline(tuple(passes)) if passes is not None
+            else default_pipeline())
+        graph, diagnostics = pipeline.run(graph)
     graph.validate()
     order = graph.toposort()
-    groups = _partition_groups(order)
-    for g in groups:
+    groups, fusion_diags = _partition_groups(graph, order, spec,
+                                             vector_factor)
+    diagnostics.extend(fusion_diags)
+    bundles = _assign_bundles(graph, n_bundles)
+    return Schedule(graph, order, groups, bundles, n_bundles, diagnostics)
+
+
+# ----------------------------------------------------------------------
+# convex-subgraph DAG fusion
+# ----------------------------------------------------------------------
+def _is_fusible(st: Stage) -> bool:
+    return (st.kind in FUSIBLE_KINDS
+            and all(len(c.shape) == 2 for c in st.inputs + st.outputs))
+
+
+def _partition_groups(graph: DataflowGraph, order: list[Stage],
+                      spec=None, vector_factor: int = 1
+                      ) -> tuple[list[FusionGroup], list[str]]:
+    """Grow maximal convex fusion groups over the stage DAG.
+
+    Seeds one group per stage, then repeatedly merges the pair of
+    edge-adjacent groups with the largest modeled latency win
+    (``analytic_latency``: a merge removes one HBM write+read
+    round-trip and lets both halves drain at the slower rate instead
+    of sequentially).  A merge is legal iff both groups are fusible on
+    the same plane shape, the union is *convex* in the DAG — no path
+    between two member stages passes through an outside stage — and
+    :func:`~repro.core.vectorize.choose_tile` can still fit the
+    double-buffered union in VMEM.
+    """
+    n = len(order)
+    pos = {st: i for i, st in enumerate(order)}
+
+    succ: list[set[int]] = [set() for _ in range(n)]
+    for i, st in enumerate(order):
+        for ch in st.outputs:
+            for c in ch.consumers:
+                succ[i].add(pos[c])
+
+    # reach[i]: bitmask of stages strictly reachable from i
+    reach = [0] * n
+    for i in reversed(range(n)):
+        m = 0
+        for j in succ[i]:
+            m |= (1 << j) | reach[j]
+        reach[i] = m
+
+    owner = list(range(n))                      # stage idx -> group id
+    members: dict[int, int] = {i: 1 << i for i in range(n)}
+    fusible = [_is_fusible(st) for st in order]
+    shape: dict[int, tuple[int, ...]] = {
+        i: order[i].outputs[0].shape if order[i].outputs else ()
+        for i in range(n)}
+
+    def is_convex(union: int) -> bool:
+        above = 0
+        for i in _bits(union):
+            above |= reach[i]
+        for x in _bits(above & ~union):
+            if reach[x] & union:
+                return False
+        return True
+
+    def make_group(mask: int) -> FusionGroup:
+        g = FusionGroup([order[i] for i in _bits(mask)], [], [], [], {})
         _classify_channels(g, graph)
         g.halo = _halo_analysis(g)
-    bundles = _assign_bundles(graph, n_bundles)
-    return Schedule(graph, order, groups, bundles, n_bundles)
+        return g
+
+    # masks are immutable ints: memoize the per-candidate work so each
+    # merge round only evaluates unions it has not seen before
+    _fits_cache: dict[int, bool] = {}
+    _lat_cache: dict[int, float] = {}
+
+    def fits_vmem(mask: int) -> bool:
+        if mask not in _fits_cache:
+            from repro.core.vectorize import V5E, choose_tile
+            g = make_group(mask)
+            try:
+                choose_tile(g, spec or V5E, vector_factor)
+                _fits_cache[mask] = True
+            except ValueError:
+                _fits_cache[mask] = False
+        return _fits_cache[mask]
+
+    def latency(mask: int) -> float:
+        if mask not in _lat_cache:
+            tasks = ([TaskTiming("read", ii=1.0, fill=32.0)]
+                     + [TaskTiming(order[i].name, ii=order[i].ii,
+                                   fill=order[i].fill) for i in _bits(mask)]
+                     + [TaskTiming("write", ii=1.0, fill=32.0)])
+            _lat_cache[mask] = analytic_latency(tasks,
+                                                _COST_ITEMS)["dataflow"]
+        return _lat_cache[mask]
+
+    n_merges = 0
+    while True:
+        pairs: set[tuple[int, int]] = set()
+        for i in range(n):
+            for j in succ[i]:
+                ga, gb = owner[i], owner[j]
+                if ga != gb:
+                    pairs.add((min(ga, gb), max(ga, gb)))
+        best: tuple[float, int, int, int] | None = None
+        for ga, gb in sorted(pairs):
+            if not (fusible[ga] and fusible[gb]):
+                continue
+            if shape[ga] != shape[gb]:
+                continue
+            union = members[ga] | members[gb]
+            if not is_convex(union):
+                continue
+            if not fits_vmem(union):
+                continue
+            gain = latency(members[ga]) + latency(members[gb]) \
+                - latency(union)
+            if best is None or gain > best[0]:
+                best = (gain, ga, gb, union)
+        if best is None:
+            break
+        _, ga, gb, union = best
+        members[ga] = union
+        del members[gb]
+        for i in _bits(union):
+            owner[i] = ga
+        n_merges += 1
+
+    groups = [make_group(members[g]) for g in _order_groups(members, succ)]
+    diags = [f"[convex-fusion] {n} stages -> {len(groups)} groups "
+             f"({n_merges} merges)"]
+    for g in groups:
+        if len(g.stages) > 1:
+            diags.append(
+                f"[convex-fusion] fused {{{','.join(s.name for s in g.stages)}}}"
+                f" into one streaming kernel")
+    return groups, diags
 
 
-# ----------------------------------------------------------------------
-# group partitioning
-# ----------------------------------------------------------------------
-def _partition_groups(order: list[Stage]) -> list[FusionGroup]:
-    """Greedy partitioning of the topo order into fusion groups.
+def _order_groups(members: dict[int, int], succ: list[set[int]]
+                  ) -> list[int]:
+    """Topological order of the (convex => acyclic) group DAG.
 
-    A stage joins the current group iff it is fusible, works on the
-    same 2-D plane shape as the group, and *all* of its non-graph-input
-    producers are already inside the group (so the group stays a
-    contiguous subgraph and channel writes precede reads inside the
-    fused kernel).
+    Deterministic: ready groups are taken lowest-member-index first,
+    so the result is stable across runs.
     """
-    groups: list[FusionGroup] = []
-    current: list[Stage] = []
-    current_shape: tuple[int, ...] | None = None
+    owner = {i: g for g, mask in members.items() for i in _bits(mask)}
+    gsucc: dict[int, set[int]] = {g: set() for g in members}
+    indeg: dict[int, int] = {g: 0 for g in members}
+    for i, js in enumerate(succ):
+        for j in js:
+            a, b = owner[i], owner[j]
+            if a != b and b not in gsucc[a]:
+                gsucc[a].add(b)
+                indeg[b] += 1
+    ready = sorted(g for g in members if indeg[g] == 0)
+    out: list[int] = []
+    while ready:
+        g = ready.pop(0)
+        out.append(g)
+        for nb in sorted(gsucc[g]):
+            indeg[nb] -= 1
+            if indeg[nb] == 0:
+                ready.append(nb)
+        ready.sort()
+    return out
 
-    def flush() -> None:
-        nonlocal current, current_shape
-        if current:
-            groups.append(FusionGroup(current, [], [], [], {}))
-        current = []
-        current_shape = None
 
-    for st in order:
-        fusible = (st.kind in FUSIBLE_KINDS
-                   and all(len(c.shape) == 2 for c in st.inputs + st.outputs))
-        if not fusible:
-            flush()
-            groups.append(FusionGroup([st], [], [], [], {}))
-            continue
-        shape = st.outputs[0].shape
-        producers_inside = all(
-            ch.producer is None or ch.producer in current
-            for ch in st.inputs)
-        if current and (shape != current_shape or not producers_inside):
-            flush()
-        current.append(st)
-        current_shape = shape
-    flush()
-    return groups
+def _bits(mask: int):
+    while mask:
+        low = mask & -mask
+        yield low.bit_length() - 1
+        mask ^= low
 
 
 def _classify_channels(g: FusionGroup, graph: DataflowGraph) -> None:

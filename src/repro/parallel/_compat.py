@@ -1,0 +1,29 @@
+"""JAX version-compatibility shims for the parallel substrate.
+
+``shard_map`` moved from ``jax.experimental.shard_map`` to ``jax``
+around 0.5, and its replication-check kwarg was renamed
+``check_rep`` -> ``check_vma``.  Code in this package writes the new
+spelling; this shim translates for older installs.
+"""
+from __future__ import annotations
+
+import inspect
+
+try:
+    from jax import shard_map as _shard_map
+except ImportError:                      # jax < 0.5
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+# the promotion to jax.shard_map and the check_rep -> check_vma rename
+# happened in different releases, so detect the kwarg by signature
+_CHECK_KW = ("check_vma"
+             if "check_vma" in inspect.signature(_shard_map).parameters
+             else "check_rep")
+
+__all__ = ["shard_map"]
+
+
+def shard_map(f, /, **kw):
+    if "check_vma" in kw and _CHECK_KW != "check_vma":
+        kw[_CHECK_KW] = kw.pop("check_vma")
+    return _shard_map(f, **kw)

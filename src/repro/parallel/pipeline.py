@@ -18,7 +18,7 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+from repro.parallel._compat import shard_map
 
 __all__ = ["pipeline_apply"]
 

@@ -1,0 +1,170 @@
+"""End-to-end pass-based pipeline: convex DAG fusion + bit-exactness.
+
+Acceptance tests for the compiler restructure: diamond-shaped graphs
+(explicit or auto-split) must land in ONE fused kernel group and stay
+bit-exact (atol=0) against ``reference_eval`` on all three backends.
+
+Bit-exactness note: the stencil taps below are powers of two, so every
+product is exact and XLA's FMA contraction under jit cannot change a
+single bit vs the op-by-op reference.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (BACKENDS, DataflowGraph, build_schedule,
+                        compile_graph, lower_graph)
+from repro.core.apps import APPS, JACOBI3, LAPLACE3, _conv, compile_app
+
+H, W = 300, 640   # not tile-aligned: exercises grid padding + masking
+
+
+def _diamond_explicit(h=H, w=W):
+    """split -> two stencil branches -> point merge (explicit split)."""
+    g = DataflowGraph("diamond")
+    x = g.input("x", (h, w))
+    a, b = g.split(x, 2)
+    s1 = g.stencil(a, (3, 3), _conv(LAPLACE3), name="lap")
+    s2 = g.stencil(b, (3, 3), _conv(JACOBI3), name="jac")
+    g.output(g.point2(s1, s2, lambda u, v: u - v, name="merge"), "y")
+    return g
+
+
+def _diamond_autosplit(h=H, w=W):
+    """Same diamond but non-canonical: x read twice, no split stage."""
+    g = DataflowGraph("diamond_auto")
+    x = g.input("x", (h, w))
+    s1 = g.stencil(x, (3, 3), _conv(LAPLACE3), name="lap")
+    s2 = g.stencil(x, (3, 3), _conv(JACOBI3), name="jac")
+    g.output(g.point2(s1, s2, lambda u, v: u - v, name="merge"), "y")
+    return g
+
+
+@pytest.mark.parametrize("builder", [_diamond_explicit, _diamond_autosplit],
+                         ids=["explicit-split", "auto-split"])
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_diamond_single_group_bit_exact(builder, backend, rng):
+    g = builder()
+    xv = rng.normal(size=(H, W)).astype(np.float32)
+    app = compile_graph(g, backend=backend)
+    assert len(app.schedule.groups) == 1, app.schedule.describe()
+    # reference on the canonicalized graph (the non-canonical original
+    # would be rejected by validate(), by design)
+    ref = np.asarray(app.schedule.graph.reference_eval({"x": xv})["y"])
+    # ... and identical to the explicit-split program's semantics
+    np.testing.assert_array_equal(
+        ref, np.asarray(_diamond_explicit().reference_eval({"x": xv})["y"]))
+    out = np.asarray(app(x=xv)["y"])
+    np.testing.assert_array_equal(out, ref)   # atol=0: bit-exact
+
+
+def test_deep_diamond_with_interleaved_branches(rng):
+    """Branches of different depth + a second diamond nested inside."""
+    g = DataflowGraph("deep")
+    x = g.input("x", (H, W))
+    s1 = g.stencil(x, (3, 3), _conv(LAPLACE3), name="a1")
+    s2 = g.stencil(s1, (3, 3), _conv(JACOBI3), name="a2")   # deep branch
+    s3 = g.stencil(x, (5, 5), _conv(np.ones((5, 5), np.float32) / 32.0),
+                   name="b1")                               # shallow branch
+    m = g.point2(s2, s3, lambda u, v: u + v, name="m1")
+    g.output(g.point2(m, x, lambda u, v: u - v, name="m2"), "y")
+    xv = rng.normal(size=(H, W)).astype(np.float32)
+    app = compile_graph(g, backend="pallas")
+    assert len(app.schedule.groups) == 1
+    ref = np.asarray(app.schedule.graph.reference_eval({"x": xv})["y"])
+    np.testing.assert_array_equal(np.asarray(app(x=xv)["y"]), ref)
+
+
+def test_reduce_breaks_convexity(rng):
+    """A reduce on one branch must NOT be fused; the merge stage joins
+    the fusible group only if the union stays convex."""
+    g = DataflowGraph("nonconvex")
+    x = g.input("x", (48, 128))
+    a, b = g.split(x, 2)
+    p = g.point(a, lambda v: v * 2.0, name="p")
+    r = g.reduce(b, jnp.sum, out_shape=(), name="r")
+    g.output(p, "y")
+    g.output(r, "total")
+    sched = build_schedule(g)
+    kinds = [{s.kind for s in grp.stages} for grp in sched.groups]
+    assert {"reduce"} in kinds
+    # reduce is alone; split+point fused together
+    fused = [grp for grp in sched.groups if "reduce" not in
+             {s.kind for s in grp.stages}]
+    assert len(fused) == 1 and len(fused[0].stages) == 2
+    out = compile_graph(g, backend="pallas")(x=rng.normal(
+        size=(48, 128)).astype(np.float32))
+    assert out["y"].shape == (48, 128) and out["total"].shape == ()
+
+
+def test_group_order_respects_cross_group_deps(rng):
+    """Producer groups must run before consumer groups even when the
+    DAG interleaves fusible and non-fusible stages."""
+    g = DataflowGraph("xdep")
+    x = g.input("x", (48, 128))
+    a, b = g.split(x, 2)
+    r = g.reduce(a, lambda v: jnp.sum(v, axis=1, keepdims=True) * 0.0,
+                 out_shape=(48, 1), name="rsum")
+    rb = g.custom([r], lambda v: jnp.broadcast_to(v, (48, 128)),
+                  [(48, 128)], name="bcast")[0]
+    g.output(g.point2(b, rb, lambda u, v: u + v, name="mix"), "y")
+    sched = build_schedule(g)
+    produced = set()
+    for grp in sched.groups:
+        for st in grp.stages:
+            for ch in st.inputs:
+                assert ch.producer is None or ch.producer in produced, \
+                    f"{st.name} runs before its producer"
+            produced.add(st)
+    xv = rng.normal(size=(48, 128)).astype(np.float32)
+    ref = np.asarray(g.reference_eval({"x": xv})["y"])
+    np.testing.assert_array_equal(
+        np.asarray(compile_graph(g, backend="pallas")(x=xv)["y"]), ref)
+
+
+@pytest.mark.parametrize("name", ["harris", "unsharp_mask",
+                                  "optical_flow_lk"])
+def test_branchy_apps_fuse_to_one_kernel(name):
+    g = APPS[name][0](48, 256)
+    sched = build_schedule(g)
+    assert len(sched.groups) == 1, sched.describe()
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_harris_matches_reference_all_backends(backend, rng):
+    g = APPS["harris"][0](48, 256)
+    inputs = {c.name: rng.normal(size=c.shape).astype(np.float32)
+              for c in g.graph_inputs}
+    ref = g.reference_eval(inputs)
+    run, sched = lower_graph(g, backend)
+    out = run(inputs)
+    assert len(sched.groups) == 1
+    np.testing.assert_allclose(np.asarray(out["out"]),
+                               np.asarray(ref["out"]), atol=2e-4, rtol=2e-4)
+
+
+def test_compile_app_helper(rng):
+    app = compile_app("gaussian_blur", 48, 256, backend="xla")
+    xv = rng.normal(size=(48, 256)).astype(np.float32)
+    assert app(img=xv)["out"].shape == (48, 256)
+
+
+def test_vmem_budget_limits_fusion():
+    """With a tiny VMEM spec the fusion search must stop merging
+    instead of producing an unlowerable group."""
+    from repro.core import TPUSpec
+    tiny = TPUSpec(vmem_bytes=64 * 1024)
+    g = APPS["filter_chain"][0](256, 1024)
+    sched = build_schedule(g, spec=tiny)
+    assert len(sched.groups) >= 2
+    big = build_schedule(APPS["filter_chain"][0](256, 1024))
+    assert len(big.groups) == 1
+
+
+def test_toposort_deque_determinism():
+    """Kahn with deque keeps insertion-order tie-breaking."""
+    g = DataflowGraph("order")
+    ins = [g.input(f"i{k}", (8, 128)) for k in range(5)]
+    for k, c in enumerate(ins):
+        g.output(g.point(c, jnp.abs, name=f"p{k}"), f"o{k}")
+    assert [s.name for s in g.toposort()] == [f"p{k}" for k in range(5)]

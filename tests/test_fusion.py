@@ -6,6 +6,7 @@ hypothesis-generated random stage chains.
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import build_schedule, compile_graph, lower_graph

@@ -1,5 +1,8 @@
 """FIFO-pipeline latency model: reproduces the paper's Fig. 1 law."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import TaskTiming, analytic_latency, simulate_pipeline

@@ -1,0 +1,190 @@
+"""Canonicalization pass pipeline (transform.py).
+
+The paper's *automatic transformations*: programmers write the natural
+program; the compiler rewrites it into canonical dataflow form.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (AutoSplitInsertion, ChannelContractError,
+                        DataflowGraph, DeadChannelElimination, PassPipeline,
+                        PointFusion, build_schedule, compile_graph,
+                        default_pipeline)
+
+
+def _multi_reader_graph(h=8, w=128):
+    """x is read twice with no explicit split — non-canonical."""
+    g = DataflowGraph("mr")
+    x = g.input("x", (h, w))
+    a = g.point(x, jnp.abs, name="A")
+    b = g.point(x, jnp.exp, name="B")
+    g.output(g.point2(a, b, jnp.add, name="C"), "y")
+    return g
+
+
+def test_auto_split_inserts_split_stage():
+    g = _multi_reader_graph()
+    with pytest.raises(ChannelContractError):
+        g.validate()
+    g, diags = AutoSplitInsertion().run(g)
+    g.validate()  # canonical now
+    splits = [s for s in g.stages if s.kind == "split"]
+    assert len(splits) == 1 and len(splits[0].outputs) == 2
+    assert any("read 2x" in d for d in diags)
+
+
+def test_auto_split_same_stage_reading_channel_twice():
+    g = DataflowGraph("dup")
+    x = g.input("x", (8, 128))
+    g.output(g.point2(x, x, jnp.add, name="dbl"), "y")
+    g, _ = AutoSplitInsertion().run(g)
+    g.validate()
+    xv = np.random.default_rng(0).normal(size=(8, 128)).astype(np.float32)
+    np.testing.assert_array_equal(
+        np.asarray(g.reference_eval({"x": xv})["y"]), xv + xv)
+
+
+def test_auto_split_reference_semantics_unchanged():
+    rng = np.random.default_rng(1)
+    xv = rng.normal(size=(8, 128)).astype(np.float32)
+    expected = np.abs(xv) + np.exp(xv)
+    g = _multi_reader_graph()
+    g, _ = AutoSplitInsertion().run(g)
+    np.testing.assert_allclose(
+        np.asarray(g.reference_eval({"x": xv})["y"]), expected, atol=1e-6)
+
+
+def test_dead_channel_elimination_prunes_stage_and_arm():
+    g = DataflowGraph("dead")
+    x = g.input("x", (8, 128))
+    a, b = g.split(x, 2)
+    g.output(g.point(a, jnp.abs, name="live"), "y")
+    g.point(b, jnp.exp, name="deadstage")        # result never read
+    with pytest.raises(ChannelContractError):
+        g.validate()
+    g, diags = DeadChannelElimination().run(g)
+    g.validate()
+    names = {s.name for s in g.stages}
+    assert "deadstage" not in names
+    # the split lost its dead arm and collapsed into a wire
+    assert not any(s.kind == "split" for s in g.stages)
+    assert any("collapsed" in d for d in diags)
+
+
+def test_dead_channel_elimination_multi_output_stage():
+    """A multi-output stage whose outputs are ALL dead is pruned whole
+    (regression: the second dead output used to crash the sweep)."""
+    g = DataflowGraph("dead2")
+    x = g.input("x", (8, 128))
+    a, b = g.split(x, 2)
+    g.output(g.point(a, jnp.abs, name="live"), "y")
+    g.custom([b], lambda v: (v, v), [(8, 128), (8, 128)], name="deadcustom")
+    g, _ = DeadChannelElimination().run(g)
+    g.validate()
+    assert "deadcustom" not in {s.name for s in g.stages}
+
+
+def test_dead_channel_elimination_drops_unread_input():
+    g = DataflowGraph("unread-in")
+    x = g.input("x", (8, 128))
+    g.input("unused", (8, 128))
+    g.output(g.point(x, jnp.abs), "y")
+    g, diags = DeadChannelElimination().run(g)
+    g.validate()
+    assert [c.name for c in g.graph_inputs] == ["x"]
+    assert any("unused" in d for d in diags)
+
+
+def test_point_fusion_composes_stages():
+    g = DataflowGraph("pf")
+    x = g.input("x", (8, 128))
+    a = g.point(x, lambda v: v * 2.0, name="dbl")
+    b = g.point(a, lambda v: v + 1.0, name="inc")
+    g.output(b, "y")
+    g, diags = PointFusion().run(g)
+    g.validate()
+    assert len(g.stages) == 1
+    assert g.stages[0].kind == "point"
+    assert any("fused" in d for d in diags)
+    xv = np.random.default_rng(0).normal(size=(8, 128)).astype(np.float32)
+    np.testing.assert_array_equal(
+        np.asarray(g.reference_eval({"x": xv})["y"]), xv * 2.0 + 1.0)
+
+
+def test_point_fusion_into_pointn():
+    g = DataflowGraph("pfn")
+    x = g.input("x", (8, 128))
+    z = g.input("z", (8, 128))
+    a = g.point(x, lambda v: v * 0.5, name="half")
+    g.output(g.point2(a, z, lambda u, v: u - v, name="sub"), "y")
+    g, _ = PointFusion().run(g)
+    g.validate()
+    assert len(g.stages) == 1 and g.stages[0].kind == "pointN"
+    rng = np.random.default_rng(0)
+    xv = rng.normal(size=(8, 128)).astype(np.float32)
+    zv = rng.normal(size=(8, 128)).astype(np.float32)
+    np.testing.assert_array_equal(
+        np.asarray(g.reference_eval({"x": xv, "z": zv})["y"]),
+        xv * 0.5 - zv)
+
+
+def test_point_fusion_respects_graph_outputs():
+    """A channel that IS a graph output must materialize: no fusion."""
+    g = DataflowGraph("keep")
+    x = g.input("x", (8, 128))
+    a = g.point(x, lambda v: v * 2.0, name="dbl")
+    g.output(a, "mid")
+    g.output(g.point(a, lambda v: v + 1.0, name="inc"), "y")
+    g, _ = AutoSplitInsertion().run(g)   # 'mid' read by inc AND output
+    g, diags = PointFusion().run(g)
+    g.validate()
+    assert "mid" in [c.name for c in g.graph_outputs]
+
+
+def test_pipeline_runs_all_passes_with_tagged_diags():
+    g = _multi_reader_graph()
+    g, diags = default_pipeline().run(g)
+    g.validate()
+    tags = {d.split("]")[0].lstrip("[") for d in diags}
+    assert "auto-split" in tags and "point-fusion" in tags
+
+
+def test_multi_reader_compiles_via_pipeline_and_errors_strict():
+    g = _multi_reader_graph()
+    app = compile_graph(g, backend="xla")
+    xv = np.random.default_rng(2).normal(size=(8, 128)).astype(np.float32)
+    np.testing.assert_allclose(np.asarray(app(x=xv)["y"]),
+                               np.abs(xv) + np.exp(xv), atol=1e-6)
+    # the same program is rejected when strict (the seed behaviour)
+    with pytest.raises(ChannelContractError):
+        compile_graph(_multi_reader_graph(), strict=True)
+
+
+def test_schedule_describe_reports_pass_diagnostics():
+    sched = build_schedule(_multi_reader_graph())
+    text = sched.describe()
+    assert "passes:" in text
+    assert "[auto-split]" in text
+    assert "[convex-fusion]" in text
+
+
+def test_cycle_still_raises_through_pipeline():
+    """Passes must not eat cycles: a 2-cycle survives canonicalization
+    (no self-fusion) and validate() raises."""
+    from repro.core import CycleError
+    g = DataflowGraph("cyc")
+    c1 = g.channel((8, 128))
+    c2 = g.channel((8, 128))
+    g.task("a", "point", jnp.abs, [c1], [c2])
+    g.task("b", "point", jnp.abs, [c2], [c1])
+    with pytest.raises((CycleError, ChannelContractError)):
+        compile_graph(g)
+
+
+def test_custom_pass_list():
+    g = _multi_reader_graph()
+    sched = build_schedule(g, passes=PassPipeline((AutoSplitInsertion(),)))
+    # without PointFusion the three point stages stay distinct
+    kinds = [s.kind for s in sched.graph.stages]
+    assert kinds.count("point") == 2 and kinds.count("pointN") == 1
