@@ -20,6 +20,7 @@ MODULES = [
     "benchmarks.fig8_backends",
     "benchmarks.table3_resources",
     "benchmarks.bench_kernels",
+    "benchmarks.bench_serving",
     "benchmarks.lm_roofline",
 ]
 

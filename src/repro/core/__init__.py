@@ -17,7 +17,7 @@ from repro.core.transform import (AutoSplitInsertion, DeadChannelElimination,
                                   default_pipeline)
 from repro.core.schedule import FusionGroup, Schedule, build_schedule
 from repro.core.fusion import BACKENDS, lower_graph, lower_group
-from repro.core.host import CompiledApp, build_host_app
+from repro.core.host import CompiledApp, LaunchHandle, build_host_app
 from repro.core.compiler import compile_graph
 from repro.core.simulate import TaskTiming, analytic_latency, simulate_pipeline
 from repro.core.vectorize import TPUSpec, V5E, choose_tile
@@ -28,6 +28,7 @@ __all__ = [
     "DeadChannelElimination", "PointFusion", "default_pipeline",
     "FusionGroup", "Schedule", "build_schedule",
     "BACKENDS", "lower_graph", "lower_group", "CompiledApp",
-    "build_host_app", "compile_graph", "TaskTiming", "analytic_latency",
+    "LaunchHandle", "build_host_app", "compile_graph", "TaskTiming",
+    "analytic_latency",
     "simulate_pipeline", "TPUSpec", "V5E", "choose_tile",
 ]

@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import hashlib
 from typing import Any, Callable, Sequence
 
 import jax.numpy as jnp
@@ -309,9 +310,56 @@ class DataflowGraph:
                     if indeg[consumer] == 0:
                         ready.append(consumer)
         if len(order) != len(self.stages):
-            stuck = [s.name for s in self.stages if s not in set(order)]
-            raise CycleError(f"dataflow graph has a cycle through {stuck}")
+            placed = set(order)
+            stuck = [s for s in self.stages if s not in placed]
+            chans = sorted({ch.name for s in stuck for ch in s.inputs
+                            if ch.producer is not None
+                            and ch.producer not in placed})
+            raise CycleError(
+                f"dataflow graph has a cycle through stages "
+                f"{[s.name for s in stuck]} (channels {chans})")
         return order
+
+    # ------------------------------------------------------------------
+    # canonical signature (the compile-cache key)
+    # ------------------------------------------------------------------
+    def signature(self) -> str:
+        """Canonical structural digest of the graph.
+
+        Two graphs get the same signature iff they have the same
+        topology, shapes, dtypes, stencil windows, FIFO depths, graph
+        I/O channel names (the compiled app's calling convention) and
+        stage bodies (a best-effort bytecode+closure fingerprint; see
+        :func:`_fn_fingerprint`).  *Internal* channel and stage names
+        do not matter, so a relabeled copy of a graph hits the compile
+        cache (:class:`repro.runtime.cache.CompileCache`).  Signatures
+        are computed in topological order, so they are stable across
+        construction orderings of the same DAG.
+        """
+        ids: dict[Channel, int] = {}
+
+        def cid(ch: Channel) -> str:
+            if ch not in ids:
+                ids[ch] = len(ids)
+            return f"c{ids[ch]}"
+
+        # graph I/O channel NAMES are part of the signature: they are
+        # the compiled app's calling convention (input/output keywords),
+        # so two graphs differing only in I/O names must not share an
+        # app.  Internal channel names stay excluded.
+        lines = [f"in {cid(ch)} name={ch.name} {ch.shape} "
+                 f"{np.dtype(ch.dtype).name} depth={ch.depth}"
+                 for ch in self.graph_inputs]
+        for st in self.toposort():
+            ins = ",".join(cid(c) for c in st.inputs)
+            outs = ",".join(
+                f"{cid(c)}:{c.shape}:{np.dtype(c.dtype).name}:d{c.depth}"
+                for c in st.outputs)
+            lines.append(f"stage {st.kind} w={st.window} "
+                         f"fn={_fn_fingerprint(st.fn)} [{ins}]->[{outs}]")
+        lines.extend(f"out {cid(ch)} name={ch.name}"
+                     for ch in self.graph_outputs)
+        return hashlib.sha256("\n".join(lines).encode()).hexdigest()[:16]
 
     # ------------------------------------------------------------------
     # reference semantics: execute the graph stage-by-stage with numpy-ish
@@ -336,6 +384,57 @@ class DataflowGraph:
             for ch, v in zip(st.outputs, outs):
                 env[ch] = v.astype(ch.dtype)
         return {ch.name: env[ch] for ch in self.graph_outputs}
+
+
+def _fn_fingerprint(fn: Any, _depth: int = 0) -> str:
+    """Best-effort structural fingerprint of a stage function.
+
+    Hashes the bytecode, code constants, referenced global/attribute
+    names (with the globals resolved to their current values, so
+    ``lambda x: jnp.abs(x)`` and ``lambda x: jnp.exp(x)`` differ),
+    argument defaults, and (recursively) the closure cells.  Values
+    without a stable value-based repr fall back to ``id()`` —
+    conservative: the signature then only matches the exact same
+    function object, which can cost cache hits but never returns a
+    wrong kernel.
+    """
+    if fn is None:
+        return "none"
+    code = getattr(fn, "__code__", None)
+    if code is None or _depth > 4:
+        name = (getattr(fn, "__qualname__", None)
+                or getattr(fn, "__name__", None))
+        if name:
+            return f"{getattr(fn, '__module__', '')}.{name}"
+        return f"id{id(fn)}"
+    parts = [code.co_code.hex(), repr(code.co_consts), repr(code.co_names)]
+    fglobals = getattr(fn, "__globals__", {})
+    for name in code.co_names:
+        if name in fglobals:
+            parts.append(_const_fingerprint(fglobals[name], _depth + 1))
+    for dflt in (fn.__defaults__ or ()):
+        parts.append(_const_fingerprint(dflt, _depth + 1))
+    for dflt in (fn.__kwdefaults__ or {}).values():
+        parts.append(_const_fingerprint(dflt, _depth + 1))
+    for cell in (fn.__closure__ or ()):
+        parts.append(_const_fingerprint(cell.cell_contents, _depth + 1))
+    return hashlib.sha256("|".join(parts).encode()).hexdigest()[:12]
+
+
+def _const_fingerprint(v: Any, depth: int) -> str:
+    if callable(v):
+        return _fn_fingerprint(v, depth)
+    if isinstance(v, (list, tuple)):
+        return "[" + ",".join(_const_fingerprint(x, depth) for x in v) + "]"
+    if isinstance(v, np.ndarray):
+        return hashlib.sha256(v.tobytes()).hexdigest()[:12] + str(v.shape)
+    if hasattr(v, "__array__") and hasattr(v, "shape"):  # jax arrays
+        a = np.asarray(v)
+        return hashlib.sha256(a.tobytes()).hexdigest()[:12] + str(a.shape)
+    r = repr(v)
+    if " at 0x" in r:              # default object repr: identity only
+        return f"id{id(v)}"
+    return r
 
 
 def extract_patches(x: jnp.ndarray, window: tuple[int, int]) -> jnp.ndarray:

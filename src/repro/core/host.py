@@ -28,7 +28,29 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core.graph import DataflowGraph
 from repro.core.schedule import Schedule
 
-__all__ = ["CompiledApp", "build_host_app"]
+__all__ = ["CompiledApp", "LaunchHandle", "build_host_app"]
+
+
+@dataclasses.dataclass
+class LaunchHandle:
+    """Future-like handle for one asynchronously dispatched execution.
+
+    Holds the (possibly still in-flight) device arrays; ``result()``
+    blocks until they are ready.  The software analogue of waiting on
+    an XRT event from ``enqueueTask``.
+    """
+
+    outputs: dict[str, Any]
+
+    def done(self) -> bool:
+        """True when every output buffer has landed (non-blocking)."""
+        return all(o.is_ready() for o in self.outputs.values()
+                   if hasattr(o, "is_ready"))
+
+    def result(self) -> dict[str, Any]:
+        """Block until the computation finishes; return the outputs."""
+        jax.block_until_ready(self.outputs)
+        return self.outputs
 
 
 @dataclasses.dataclass
@@ -61,6 +83,37 @@ class CompiledApp:
         outs = self.fn(*args)
         return dict(zip(self.output_names, outs))
 
+    def launch(self, **inputs: Any) -> "LaunchHandle":
+        """Asynchronously dispatch one execution (the XRT ``enqueueTask``).
+
+        Returns immediately with a future-like :class:`LaunchHandle` —
+        JAX's async dispatch means the device works while the host
+        keeps queuing.  The serving engine
+        (:class:`repro.runtime.engine.StreamEngine`) builds its
+        double-buffered pipeline on exactly this: launch item k+1
+        before blocking on item k.
+        """
+        args = [inputs[n] for n in self.input_names]
+        outs = self.fn(*args)
+        return LaunchHandle(dict(zip(self.output_names, outs)))
+
+    def signature(self) -> str:
+        """Cache/batching identity: canonical graph digest + backend.
+
+        Requests whose apps share a signature are interchangeable for
+        the micro-batcher (same topology, shapes, stage bodies and
+        backend), and repeated compiles of such graphs hit the
+        :class:`repro.runtime.cache.CompileCache`.  Memoized: the
+        graph is post-canonicalization and does not change under an
+        already-compiled app, and the serving engine calls this on
+        every request.
+        """
+        sig = getattr(self, "_signature", None)
+        if sig is None:
+            sig = f"{self.graph.signature()}:{self.backend}"
+            self._signature = sig
+        return sig
+
     # -- introspection -------------------------------------------------
     def cost(self) -> dict[str, float]:
         ca = self.compiled.cost_analysis() or {}
@@ -68,9 +121,7 @@ class CompiledApp:
             ca = ca[0] if ca else {}
         return {
             "flops": float(ca.get("flops", 0.0)),
-            "bytes": sum(float(v) for k, v in ca.items()
-                         if k.startswith("bytes accessed")
-                         and k == "bytes accessed"),
+            "bytes": float(ca.get("bytes accessed", 0.0)),
             "bytes_total": sum(float(v) for k, v in ca.items()
                                if k.startswith("bytes accessed")),
             "transcendentals": float(ca.get("transcendentals", 0.0)),
@@ -87,7 +138,14 @@ class CompiledApp:
         return out
 
     def host_program(self) -> str:
-        """Render the generated host code as an XRT-style listing."""
+        """Render the generated host code as an XRT-style listing.
+
+        This is the *static* single-shot launch plan.  The dynamic
+        counterpart — command queue, backpressure, micro-batching,
+        telemetry — is the serving runtime: see
+        :class:`repro.runtime.engine.StreamEngine`, which turns this
+        app into a long-lived service.
+        """
         lines = [
             "// ---- generated host program (XRT-style rendering) ----",
             "auto device = xcl::get_devices()[0];",

@@ -1,0 +1,20 @@
+"""Serving runtimes for compiled dataflow apps (the XRT layer).
+
+``engine.py`` is the dataflow serving engine (:class:`StreamEngine`);
+``cache.py``/``batching.py``/``telemetry.py``/``slots.py`` are its
+parts.  The LM-serving scheduler (``batcher.py``) and training loops
+(``trainer.py``, ``steps.py``, ``fault.py``) live beside it and are
+imported directly — they pull in the model stack, which this package
+namespace deliberately does not.
+"""
+from repro.runtime.batching import MicroBatcher
+from repro.runtime.cache import CacheStats, CompileCache
+from repro.runtime.engine import QueueFullError, StreamEngine, StreamRequest
+from repro.runtime.slots import SlotPool
+from repro.runtime.telemetry import Telemetry, modeled_latency
+
+__all__ = [
+    "MicroBatcher", "CacheStats", "CompileCache", "QueueFullError",
+    "StreamEngine", "StreamRequest", "SlotPool", "Telemetry",
+    "modeled_latency",
+]

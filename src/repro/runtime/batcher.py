@@ -19,7 +19,6 @@ reset on admit, also handled).
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
 from typing import Callable
 
 import jax
@@ -28,6 +27,7 @@ import numpy as np
 
 from repro.models import model as M
 from repro.models.config import ModelConfig
+from repro.runtime.slots import SlotPool
 
 __all__ = ["Request", "ContinuousBatcher"]
 
@@ -59,29 +59,35 @@ class ContinuousBatcher:
         self.cache = M.init_cache(cfg, n_slots, max_len, dtype=dtype)
         # per-slot sequence lengths (host copy is the scheduler truth)
         self.lengths = np.zeros(n_slots, np.int32)
-        self.slot_req: list[Request | None] = [None] * n_slots
-        self.queue: deque[Request] = deque()
-        self.finished: list[Request] = []
+        # slot occupancy / admission queue / retirement: the machinery
+        # shared with the dataflow StreamEngine (see runtime/slots.py)
+        self.pool: SlotPool = SlotPool(n_slots)
         self._decode = jax.jit(self._decode_step)
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
-        self.queue.append(req)
+        self.pool.submit(req)
 
     @property
     def active(self) -> int:
-        return sum(r is not None for r in self.slot_req)
+        return self.pool.active
 
-    def _free_slots(self) -> list[int]:
-        return [i for i, r in enumerate(self.slot_req) if r is None]
+    @property
+    def queue(self):
+        return self.pool.queue
+
+    @property
+    def slot_req(self) -> list[Request | None]:
+        return self.pool.slots
+
+    @property
+    def finished(self) -> list[Request]:
+        return self.pool.finished
 
     # ------------------------------------------------------------------
     def _admit(self) -> None:
         """Prefill queued requests into free slots (one at a time)."""
-        for slot in self._free_slots():
-            if not self.queue:
-                break
-            req = self.queue.popleft()
+        for slot, req in self.pool.admit():
             prompt = jnp.asarray(req.prompt, jnp.int32)[None]
             tmp_cache = M.init_cache(self.cfg, 1, self.max_len,
                                      dtype=jnp.float32)
@@ -90,7 +96,6 @@ class ContinuousBatcher:
             self._copy_slot(tmp_cache, slot)
             tok = int(jnp.argmax(logits[0], -1))
             req.tokens.append(tok)
-            self.slot_req[slot] = req
             self.lengths[slot] = len(req.prompt)
 
     def _copy_slot(self, src_cache, slot: int) -> None:
@@ -159,8 +164,7 @@ class ContinuousBatcher:
             eos = r.eos_id >= 0 and int(nxt[i]) == r.eos_id
             if over or eos or self.lengths[i] >= self.max_len - 1:
                 r.done = True
-                self.finished.append(r)
-                self.slot_req[i] = None
+                self.pool.retire(i)
                 self.lengths[i] = 0
         return produced
 

@@ -1,0 +1,178 @@
+"""Compile cache keyed by canonical graph signatures.
+
+Tracing + lowering a dataflow graph is the expensive part of
+``compile_graph`` (seconds for a Pallas app); a serving engine that
+re-traced per request would spend its life in the compiler.  The
+:class:`CompileCache` memoizes :func:`repro.core.compiler.compile_graph`
+on ``(DataflowGraph.signature(), backend, options)`` — a *structural*
+key, so a topologically identical graph built elsewhere (renamed
+channels included) still hits.
+
+Canonicalization caveat: the pass pipeline rewrites graphs in place,
+so a graph's signature can legitimately change once across its first
+compile (e.g. auto-split inserts a stage).  The cache therefore
+registers the *post-canonicalization* signature as an alias of the
+same entry — resubmitting either form hits.  The pipeline is
+idempotent (property-tested in tests/test_graph.py), so there are at
+most two keys per app.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import weakref
+from collections import OrderedDict
+from typing import Any, Callable
+
+from repro.core.compiler import compile_graph
+from repro.core.graph import DataflowGraph
+from repro.core.host import CompiledApp
+
+__all__ = ["CacheStats", "CompileCache"]
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        n = self.hits + self.misses
+        return self.hits / n if n else 0.0
+
+    def as_dict(self) -> dict[str, float]:
+        return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions, "hit_rate": self.hit_rate}
+
+
+class _PendingCompile:
+    """Future for an in-flight trace: same-key callers wait, not re-trace."""
+
+    def __init__(self) -> None:
+        self._done = threading.Event()
+        self._app: CompiledApp | None = None
+        self._err: BaseException | None = None
+
+    def resolve(self, app: CompiledApp) -> None:
+        self._app = app
+        self._done.set()
+
+    def fail(self, err: BaseException) -> None:
+        self._err = err
+        self._done.set()
+
+    def wait(self) -> CompiledApp:
+        self._done.wait()
+        if self._err is not None:
+            raise self._err
+        assert self._app is not None
+        return self._app
+
+
+class CompileCache:
+    """LRU cache of :class:`CompiledApp` keyed by graph signature.
+
+    Thread-safe: the serving engine compiles on submitter threads.
+    Tracing happens OUTSIDE the table lock — a miss installs a
+    per-key :class:`_PendingCompile`, so concurrent submits of the
+    same graph trace exactly once (one miss, waiters count as hits)
+    while hits for other, already-compiled apps proceed unstalled.
+    """
+
+    def __init__(self, maxsize: int = 64,
+                 compile_fn: Callable[..., CompiledApp] = compile_graph):
+        self.maxsize = maxsize
+        self.stats = CacheStats()
+        self._compile = compile_fn
+        self._entries: OrderedDict[tuple, CompiledApp] = OrderedDict()
+        self._pending: dict[tuple, _PendingCompile] = {}
+        # identity fast path: a graph OBJECT already served maps straight
+        # to its app without re-hashing the structure on every request
+        # (assumes graphs are not mutated once submitted for serving)
+        self._by_graph: weakref.WeakKeyDictionary[DataflowGraph, dict] = \
+            weakref.WeakKeyDictionary()
+        # per-object locks: canonicalization passes rewrite a graph IN
+        # PLACE during its first compile, so a concurrent get() on the
+        # same object must not read its structure mid-rewrite
+        self._graph_locks: weakref.WeakKeyDictionary[DataflowGraph, Any] = \
+            weakref.WeakKeyDictionary()
+        self._lock = threading.RLock()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    @staticmethod
+    def _key(sig: str, backend: str, opts: dict[str, Any]) -> tuple:
+        return (sig, backend, tuple(sorted((k, repr(v))
+                                           for k, v in opts.items())))
+
+    def get(self, graph: DataflowGraph, backend: str = "pallas",
+            **compile_kwargs: Any) -> CompiledApp:
+        """Return a compiled app for ``graph``, tracing at most once."""
+        okey = (backend, tuple(sorted((k, repr(v))
+                                      for k, v in compile_kwargs.items())))
+        with self._lock:
+            per = self._by_graph.get(graph)
+            if per is not None and okey in per:
+                self.stats.hits += 1
+                return per[okey]
+            glock = self._graph_locks.get(graph)
+            if glock is None:
+                glock = self._graph_locks[graph] = threading.Lock()
+        with glock:
+            return self._get_slow(graph, okey, backend, compile_kwargs)
+
+    def _get_slow(self, graph: DataflowGraph, okey: tuple, backend: str,
+                  compile_kwargs: dict[str, Any]) -> CompiledApp:
+        """Signature lookup / trace under the per-graph-object lock."""
+        with self._lock:
+            per = self._by_graph.get(graph)
+            if per is not None and okey in per:   # a peer just filled it
+                self.stats.hits += 1
+                return per[okey]
+            key = self._key(graph.signature(), backend, compile_kwargs)
+            app = self._entries.get(key)
+            if app is not None:
+                self._entries.move_to_end(key)
+                self.stats.hits += 1
+                self._by_graph.setdefault(graph, {})[okey] = app
+                return app
+            pending = self._pending.get(key)
+            if pending is None:
+                self._pending[key] = pending = _PendingCompile()
+                self.stats.misses += 1
+                owner = True
+            else:
+                self.stats.hits += 1        # someone else is tracing it
+                owner = False
+        if not owner:
+            app = pending.wait()
+            with self._lock:
+                self._by_graph.setdefault(graph, {})[okey] = app
+            return app
+        try:
+            app = self._compile(graph, backend=backend, **compile_kwargs)
+        except BaseException as e:
+            with self._lock:
+                del self._pending[key]
+            pending.fail(e)
+            raise
+        with self._lock:
+            self._entries[key] = app
+            # alias: the canonicalized graph's signature (module doc)
+            canon = self._key(app.graph.signature(), backend, compile_kwargs)
+            self._entries.setdefault(canon, app)
+            while len(self._entries) > self.maxsize:
+                self._entries.popitem(last=False)
+                self.stats.evictions += 1
+            self._by_graph.setdefault(graph, {})[okey] = app
+            del self._pending[key]
+        pending.resolve(app)
+        return app
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()
+            self._by_graph.clear()

@@ -1,0 +1,312 @@
+"""The streaming serving engine: an XRT-style command queue in software.
+
+FLOWER's generated host code sets up an XRT context, buffers and a
+command queue and overlaps H2D / kernel / D2H.  This module is that
+runtime layer for compiled dataflow apps, grown into a long-lived
+service:
+
+- **command queue** — a *bounded* FIFO of :class:`StreamRequest`; a
+  full queue exerts backpressure on ``submit`` exactly like a finite
+  FIFO in :func:`repro.core.simulate.simulate_pipeline` (block, or
+  raise :class:`QueueFullError` when ``block=False``).
+- **compile cache** — ``submit`` accepts raw graphs; repeated
+  topologies hit :class:`~repro.runtime.cache.CompileCache` instead
+  of re-tracing.
+- **micro-batching** — consecutive same-signature requests are
+  stacked and launched as ONE vmapped kernel with donated staging
+  buffers (:class:`~repro.runtime.batching.MicroBatcher`).
+- **double-buffered dispatch** — launches go into a
+  :class:`~repro.runtime.slots.SlotPool` of in-flight slots (default
+  2 == depth-2 FIFO).  The engine only forces a batch to host memory
+  when the pool is full or the queue idles, so batch k+1 is dispatched
+  while batch k is still executing — ``jax.block_until_ready``-free
+  pipelining on JAX's async dispatch.
+- **telemetry** — queue depth, p50/p99 latency, throughput and cache
+  hit-rate, reported side-by-side with the Fig. 1
+  :func:`~repro.core.simulate.analytic_latency` prediction
+  (:meth:`StreamEngine.report`).
+"""
+from __future__ import annotations
+
+import queue as _queue
+import threading
+import time
+from collections import deque
+from typing import Any, Mapping
+
+import numpy as np
+
+from repro.core.graph import DataflowGraph
+from repro.core.host import CompiledApp
+from repro.runtime.batching import MicroBatcher
+from repro.runtime.cache import CompileCache
+from repro.runtime.slots import SlotPool
+from repro.runtime.telemetry import Telemetry, modeled_latency
+
+__all__ = ["QueueFullError", "StreamRequest", "StreamEngine"]
+
+
+class QueueFullError(RuntimeError):
+    """The bounded request queue rejected a non-blocking submit."""
+
+
+class StreamRequest:
+    """Future-like handle for one submitted request."""
+
+    def __init__(self, app: CompiledApp, inputs: Mapping[str, Any]):
+        self.app = app
+        self.inputs = dict(inputs)
+        self.t_submit = time.perf_counter()
+        self._done = threading.Event()
+        self._result: dict[str, np.ndarray] | None = None
+        self._error: BaseException | None = None
+
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    def result(self, timeout: float | None = None) -> dict[str, np.ndarray]:
+        """Block until served; return per-output host arrays."""
+        if not self._done.wait(timeout):
+            raise TimeoutError("request not served within timeout")
+        if self._error is not None:
+            raise self._error
+        assert self._result is not None
+        return self._result
+
+    def exception(self, timeout: float | None = None) -> BaseException | None:
+        if not self._done.wait(timeout):
+            raise TimeoutError("request not served within timeout")
+        return self._error
+
+    # engine-side completion
+    def _finish(self, result: dict[str, np.ndarray]) -> None:
+        self._result = result
+        self._done.set()
+
+    def _fail(self, err: BaseException) -> None:
+        self._error = err
+        self._done.set()
+
+
+class StreamEngine:
+    """Long-lived serving engine for compiled dataflow apps.
+
+    Usage::
+
+        with StreamEngine(backend="pallas", max_batch=8) as eng:
+            handles = [eng.submit(graph, {"x": img}) for img in imgs]
+            results = [h.result() for h in handles]
+            print(eng.report())
+
+    ``max_queue`` is the FIFO depth of the request queue (the
+    backpressure bound), ``max_batch`` the micro-batch width,
+    ``inflight`` the number of outstanding kernel launches (2 ==
+    double buffering).  Extra keyword arguments are forwarded to
+    :func:`repro.core.compiler.compile_graph` on cache misses.
+    """
+
+    def __init__(self, *, backend: str = "pallas", max_queue: int = 64,
+                 max_batch: int = 8, inflight: int = 2, donate: bool = True,
+                 cache: CompileCache | None = None,
+                 telemetry: Telemetry | None = None,
+                 poll_interval: float = 0.005, linger: float = 0.002,
+                 autostart: bool = True, **compile_kwargs: Any):
+        self.backend = backend
+        self.max_queue = max_queue
+        self.max_batch = max_batch
+        self.cache = cache or CompileCache()
+        self.telemetry = telemetry or Telemetry()
+        self._compile_kwargs = compile_kwargs
+        self._queue: _queue.Queue[StreamRequest] = _queue.Queue(max_queue)
+        self._carry: deque[StreamRequest] = deque()
+        self._pool = SlotPool(inflight)
+        self._batcher = MicroBatcher(max_batch=max_batch, donate=donate)
+        self._apps: dict[str, CompiledApp] = {}
+        self._poll = poll_interval
+        self._linger = linger
+        self._stop = threading.Event()
+        self._thread: threading.Thread | None = None
+        if autostart:
+            self.start()
+
+    # ------------------------------------------------------------------
+    # client side
+    # ------------------------------------------------------------------
+    def submit(self, graph: DataflowGraph | CompiledApp,
+               inputs: Mapping[str, Any], *, block: bool = True,
+               timeout: float | None = None) -> StreamRequest:
+        """Enqueue one request; returns a future-like handle.
+
+        ``graph`` may be a raw (even non-canonical) graph — it is
+        compiled through the cache on this thread — or an already
+        compiled app.  When the bounded queue is full, ``submit``
+        blocks (bounded by ``timeout``) or, with ``block=False``,
+        raises :class:`QueueFullError`: the FIFO backpressure of the
+        simulator, live.
+        """
+        if self._stop.is_set():
+            raise RuntimeError("engine is closed")
+        if isinstance(graph, CompiledApp):
+            app = graph
+        else:
+            app = self.cache.get(graph, backend=self.backend,
+                                 **self._compile_kwargs)
+        self._apps.setdefault(app.signature(), app)
+        # validate on admission: a malformed request must fail ITS
+        # submit, not poison the micro-batch it would have joined
+        for ch in app.graph.graph_inputs:
+            if ch.name not in inputs:
+                raise ValueError(f"missing graph input {ch.name!r}")
+            got = tuple(np.shape(inputs[ch.name]))
+            if got != ch.shape:
+                raise ValueError(f"input {ch.name!r}: expected shape "
+                                 f"{ch.shape}, got {got}")
+        req = StreamRequest(app, inputs)
+        depth = self._queue.qsize()
+        try:
+            self._queue.put(req, block=block, timeout=timeout)
+        except _queue.Full:
+            raise QueueFullError(
+                f"request queue at FIFO depth {self.max_queue}; "
+                f"retry with block=True or raise max_queue") from None
+        # only successful admissions count as submitted
+        self.telemetry.observe_submit(depth)
+        if self._stop.is_set() and (self._thread is None
+                                    or not self._thread.is_alive()):
+            # raced a concurrent close(): the worker is gone and will
+            # never drain this request — fail it instead of hanging
+            self._fail_all(RuntimeError("engine closed"))
+        return req
+
+    def report(self, n_items: int | None = None) -> dict[str, Any]:
+        """Measured serving metrics + Fig. 1 model, side by side."""
+        n = n_items or max(1, self.telemetry.completed)
+        modeled: dict[str, Any] = {}
+        for sig, app in self._apps.items():
+            key = app.graph.name
+            if key in modeled:               # names are arbitrary labels
+                key = f"{key}@{sig[:6]}"
+            modeled[key] = modeled_latency(app, n, depth=self.max_queue)
+        return self.telemetry.report(cache=self.cache, modeled=modeled)
+
+    # ------------------------------------------------------------------
+    # lifecycle
+    # ------------------------------------------------------------------
+    def start(self) -> None:
+        if self._thread is None or not self._thread.is_alive():
+            self._stop.clear()
+            self._thread = threading.Thread(target=self._serve,
+                                            name="stream-engine",
+                                            daemon=True)
+            self._thread.start()
+
+    def close(self, wait: bool = True) -> None:
+        """Stop accepting requests; drain everything already queued."""
+        self._stop.set()
+        if wait and self._thread is not None and self._thread.is_alive():
+            self._thread.join()
+        if wait:
+            # a submit that raced past the closed check must not hang
+            self._fail_all(RuntimeError("engine closed"))
+
+    def __enter__(self) -> "StreamEngine":
+        return self
+
+    def __exit__(self, *exc: Any) -> None:
+        self.close()
+
+    # ------------------------------------------------------------------
+    # worker side
+    # ------------------------------------------------------------------
+    def _serve(self) -> None:
+        try:
+            while True:
+                # only park in a poll sleep when nothing is in flight:
+                # with work outstanding, an empty queue means "retire
+                # now" (useful blocking work), not "sleep"
+                block = not self._pool.active and not self._stop.is_set()
+                batch = self._next_batch(block=block)
+                if batch:
+                    self._dispatch(batch)
+                elif self._pool.active:
+                    self._retire(self._pool.oldest())
+                elif (self._stop.is_set() and self._queue.empty()
+                        and not self._carry):
+                    break
+        except BaseException as e:  # worker must never die silently
+            self._fail_all(e)
+            raise
+
+    def _take(self, timeout: float | None) -> StreamRequest | None:
+        if self._carry:
+            return self._carry.popleft()
+        try:
+            if timeout is None:
+                return self._queue.get_nowait()
+            return self._queue.get(timeout=timeout)
+        except _queue.Empty:
+            return None
+
+    def _next_batch(self, block: bool = True) -> list[StreamRequest]:
+        """Take up to ``max_batch`` same-signature requests.
+
+        FIFO order is preserved: the first request with a different
+        signature ends the batch and is carried into the next one.  A
+        short ``linger`` window lets an underfull batch wait for
+        arrivals (classic micro-batching latency/throughput trade);
+        draining (engine closed) skips it.
+        """
+        first = self._take(self._poll if block else None)
+        if first is None:
+            return []
+        batch = [first]
+        sig = first.app.signature()
+        deadline = (time.perf_counter() + self._linger
+                    if not self._stop.is_set() else 0.0)
+        while len(batch) < self.max_batch:
+            wait = deadline - time.perf_counter()
+            nxt = self._take(wait if wait > 0 else None)
+            if nxt is None:
+                break
+            if nxt.app.signature() != sig:
+                self._carry.append(nxt)
+                break
+            batch.append(nxt)
+        return batch
+
+    def _dispatch(self, batch: list[StreamRequest]) -> None:
+        app = batch[0].app
+        try:
+            # pad to the fixed batch width: every launch of this app
+            # reuses one compiled kernel shape (no ragged re-tracing)
+            outs = self._batcher.launch(app, batch, pad_to=self.max_batch)
+        except BaseException as e:
+            for r in batch:
+                r._fail(e)
+            return
+        self.telemetry.observe_batch(len(batch))
+        if not self._pool.free_slots():
+            self._retire(self._pool.oldest())         # double-buffer rotate
+        self._pool.submit((batch, outs))
+        self._pool.admit()
+
+    def _retire(self, slot: int | None) -> None:
+        if slot is None:
+            return
+        batch, outs = self._pool.retire(slot)
+        host = {k: np.asarray(v) for k, v in outs.items()}  # blocks here
+        now = time.perf_counter()
+        for i, req in enumerate(batch):
+            req._finish({k: v[i] for k, v in host.items()})
+            self.telemetry.observe_completion(now - req.t_submit)
+
+    def _fail_all(self, err: BaseException) -> None:
+        while True:
+            req = self._take(None)
+            if req is None:
+                break
+            req._fail(err)
+        while self._pool.active:
+            batch, _ = self._pool.retire(self._pool.oldest())
+            for req in batch:
+                req._fail(err)

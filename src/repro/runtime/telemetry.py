@@ -1,0 +1,125 @@
+"""Serving telemetry: measured metrics side-by-side with the Fig. 1 model.
+
+The latency simulator (:mod:`repro.core.simulate`) predicts what a
+FIFO pipeline *should* do; a live engine measures what it *does*.
+This module holds both ends: :class:`Telemetry` aggregates queue
+depth, per-request latency percentiles, throughput and batch sizes
+from a running :class:`~repro.runtime.engine.StreamEngine`, and
+:func:`modeled_latency` produces the matching analytic + simulated
+predictions for the app being served, so every engine report shows
+``measured`` next to ``modeled`` — the paper's performance model
+validated against live traffic instead of a synthetic sweep.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any
+
+import numpy as np
+
+from repro.core.simulate import TaskTiming, analytic_latency, simulate_pipeline
+
+__all__ = ["Telemetry", "modeled_latency"]
+
+#: cap on per-request samples kept in memory (reservoir of latest)
+_MAX_SAMPLES = 100_000
+
+#: cap on items fed to the O(S*n) discrete simulator in reports
+_SIM_ITEMS_CAP = 512
+
+
+def modeled_latency(app: Any, n_items: int, depth: int = 2
+                    ) -> dict[str, float]:
+    """Fig. 1 predictions for serving ``n_items`` requests through ``app``.
+
+    Tasks are the app's scheduled stages bracketed by the generated
+    read/write (H2D/D2H) tasks, exactly as the fusion cost model
+    scores them; ``depth`` is the FIFO depth of the engine's bounded
+    queues.  Returns the closed-form ``sequential`` / ``dataflow``
+    cycles plus the finite-depth discrete simulation
+    (``dataflow_sim``), so backpressure effects are visible too.
+    """
+    tasks = ([TaskTiming("read", ii=1.0, fill=32.0)]
+             + [TaskTiming(s.name, ii=s.ii, fill=s.fill)
+                for s in app.schedule.order]
+             + [TaskTiming("write", ii=1.0, fill=32.0)])
+    n = max(1, n_items)
+    out = dict(analytic_latency(tasks, n))
+    sim = simulate_pipeline(tasks, min(n, _SIM_ITEMS_CAP),
+                            depth=max(1, depth))
+    out["dataflow_sim"] = sim["dataflow_sim"]
+    return out
+
+
+class Telemetry:
+    """Thread-safe metric aggregation for a serving engine."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._latencies_s: list[float] = []
+        self._queue_depths: list[int] = []
+        self._batch_sizes: list[int] = []
+        self._t_first: float | None = None
+        self._t_last: float | None = None
+        self.completed = 0
+        self.submitted = 0
+
+    # -- observation hooks ---------------------------------------------
+    def observe_submit(self, queue_depth: int) -> None:
+        with self._lock:
+            self.submitted += 1
+            if len(self._queue_depths) < _MAX_SAMPLES:
+                self._queue_depths.append(queue_depth)
+
+    def observe_batch(self, size: int) -> None:
+        with self._lock:
+            if len(self._batch_sizes) < _MAX_SAMPLES:
+                self._batch_sizes.append(size)
+
+    def observe_completion(self, latency_s: float) -> None:
+        now = time.perf_counter()
+        with self._lock:
+            if self._t_first is None:
+                self._t_first = now
+            self._t_last = now
+            self.completed += 1
+            if len(self._latencies_s) < _MAX_SAMPLES:
+                self._latencies_s.append(latency_s)
+
+    # -- aggregation ---------------------------------------------------
+    @staticmethod
+    def _pct(xs: list[float], q: float) -> float:
+        return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
+
+    def snapshot(self) -> dict[str, float]:
+        """Measured serving metrics so far."""
+        with self._lock:
+            lat = list(self._latencies_s)
+            span = ((self._t_last - self._t_first)
+                    if (self._t_first is not None and self.completed > 1)
+                    else 0.0)
+            return {
+                "submitted": self.submitted,
+                "completed": self.completed,
+                "throughput_rps": (self.completed - 1) / span if span else 0.0,
+                "latency_p50_ms": self._pct(lat, 50) * 1e3,
+                "latency_p99_ms": self._pct(lat, 99) * 1e3,
+                "latency_mean_ms": float(np.mean(lat)) * 1e3 if lat else 0.0,
+                "queue_depth_mean": (float(np.mean(self._queue_depths))
+                                     if self._queue_depths else 0.0),
+                "queue_depth_max": (max(self._queue_depths)
+                                    if self._queue_depths else 0),
+                "batch_size_mean": (float(np.mean(self._batch_sizes))
+                                    if self._batch_sizes else 0.0),
+            }
+
+    def report(self, *, cache: Any = None,
+               modeled: dict[str, Any] | None = None) -> dict[str, Any]:
+        """``measured`` metrics next to the Fig. 1 ``modeled`` prediction."""
+        out: dict[str, Any] = {"measured": self.snapshot()}
+        if cache is not None:
+            out["cache"] = cache.stats.as_dict()
+        if modeled is not None:
+            out["modeled"] = modeled
+        return out

@@ -161,6 +161,39 @@ def test_vmem_budget_limits_fusion():
     assert len(big.groups) == 1
 
 
+def test_cost_keys_on_compiled_diamond():
+    """cost() exposes exactly the documented keys; "bytes" is the
+    EXACT top-level "bytes accessed" entry (regression: the old filter
+    `startswith and ==` was contradictory), "bytes_total" sums every
+    per-operand entry and therefore dominates it."""
+    app = compile_graph(_diamond_explicit(48, 256), backend="xla")
+    c = app.cost()
+    assert set(c) == {"flops", "bytes", "bytes_total", "transcendentals"}
+    assert all(isinstance(v, float) for v in c.values())
+    ca = app.compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    assert c["bytes"] == float(ca.get("bytes accessed", 0.0))
+    assert c["bytes"] > 0.0                  # the old filter summed nothing
+    assert c["bytes_total"] >= c["bytes"]
+
+
+def test_cycle_error_names_stages_and_channels():
+    """The CycleError message lists the cycle's channels, not just the
+    stuck stages."""
+    from repro.core import CycleError
+    g = DataflowGraph("cyc")
+    c1 = g.channel((8, 128), name="loop_a")
+    c2 = g.channel((8, 128), name="loop_b")
+    g.task("a", "point", jnp.abs, [c1], [c2])
+    g.task("b", "point", jnp.abs, [c2], [c1])
+    with pytest.raises(CycleError) as ei:
+        g.toposort()
+    msg = str(ei.value)
+    assert "loop_a" in msg and "loop_b" in msg
+    assert "'a'" in msg and "'b'" in msg
+
+
 def test_toposort_deque_determinism():
     """Kahn with deque keeps insertion-order tie-breaking."""
     g = DataflowGraph("order")

@@ -6,7 +6,7 @@ pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (ChannelContractError, CycleError, DataflowGraph,
-                        build_schedule)
+                        build_schedule, default_pipeline)
 
 
 def test_builder_produces_valid_graph():
@@ -117,6 +117,24 @@ def layered_dag(draw):
             ch = g.point(ch, jnp.abs)
         g.output(ch, f"out{i}")
     return g
+
+
+@given(layered_dag())
+@settings(max_examples=25, deadline=None)
+def test_canonicalization_pipeline_is_idempotent(g):
+    """Running the pass pipeline on an already-canonical graph is a
+    fixed point: same stage/channel counts, same signature, identical
+    schedule description, and no further diagnostics."""
+    g1, _ = default_pipeline().run(g)
+    g1.validate()
+    before = (len(g1.stages), len(g1.channels), g1.signature())
+    describe_before = build_schedule(g1, canonicalize=False).describe()
+    g2, diags2 = default_pipeline().run(g1)
+    assert g2 is g1                   # passes rewrite in place
+    assert diags2 == []               # nothing left to rewrite
+    assert (len(g2.stages), len(g2.channels), g2.signature()) == before
+    assert build_schedule(g2, canonicalize=False).describe() \
+        == describe_before
 
 
 @given(layered_dag())
