@@ -12,9 +12,11 @@ Our measurable analogues, per rung, from the *compiled* artifact:
  - CPU wall-clock of the jitted program (relative sanity only).
 
 Rungs: naive        = xla_staged (barrier between stages)
-       dataflow     = fused pallas, small tile  (128-lane bursts)
-       +burst       = fused pallas, large tile  (512-lane bursts)
-       +vectorize   = fused pallas, large tile, vector_factor=4.
+       dataflow     = fused pallas, vector_factor=1 (128-lane bursts)
+       +burst       = fused pallas, vector_factor=4 (512-lane bursts)
+       +vectorize   = fused pallas, automatic vector-factor sweep
+                      (the cost model picks the widest profitable
+                      datapath; see core/vectorize.select_tile).
 """
 from __future__ import annotations
 
@@ -56,8 +58,8 @@ def run() -> list[dict]:
         ladder = [
             ("naive", "xla_staged", 1),
             ("dataflow", "pallas", 1),
-            ("burst", "pallas", 1),       # large tile is the default
-            ("vectorized", "pallas", 4),
+            ("burst", "pallas", 4),
+            ("vectorized", "pallas", None),   # automatic sweep
         ]
         base_bytes = None
         for label, backend, vf in ladder:

@@ -21,6 +21,7 @@ MODULES = [
     "benchmarks.table3_resources",
     "benchmarks.bench_kernels",
     "benchmarks.bench_serving",
+    "benchmarks.bench_parallel",
     "benchmarks.lm_roofline",
 ]
 

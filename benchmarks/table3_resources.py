@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import build_schedule, choose_tile, compile_graph
+from repro.core import build_schedule, compile_graph
 from repro.core.apps import APPS
 from repro.core.vectorize import vmem_report
 
@@ -21,9 +21,8 @@ def run() -> list[dict]:
     for app in ("gaussian_blur", "laplace", "mean_filter", "sobel",
                 "harris", "bilateral_filter"):
         g = APPS[app][0](H, W)
-        sched = build_schedule(g)
+        sched = build_schedule(g)        # auto vector-factor sweep
         grp = sched.groups[0]
-        choose_tile(grp)
         rep = vmem_report(grp)
         appc = compile_graph(g, backend="pallas")
         mem = appc.memory()

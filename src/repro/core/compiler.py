@@ -42,7 +42,7 @@ def compile_graph(graph: DataflowGraph, backend: str = "pallas", *,
                   mesh: Mesh | None = None,
                   data_axis: str | Sequence[str] = "data",
                   donate: Sequence[str] = (), spec: TPUSpec = V5E,
-                  vector_factor: int = 1, interpret: bool = True,
+                  vector_factor: int | None = None, interpret: bool = True,
                   jit: bool = True) -> CompiledApp:
     """Compile a dataflow graph end-to-end into a :class:`CompiledApp`.
 
@@ -53,6 +53,13 @@ def compile_graph(graph: DataflowGraph, backend: str = "pallas", *,
     validator did; ``passes`` substitutes a custom pass list for the
     default pipeline.  ``mesh``/``data_axis``/``donate`` configure the
     generated host launcher (see :mod:`repro.core.host`).
+
+    ``vector_factor`` is the paper's explicit vectorization knob: it
+    pins every fused kernel's tile minor dimension to ``128 * factor``
+    (raising when a group cannot fit it).  The default ``None`` sweeps
+    the factor per group through the DMA cost model
+    (:func:`repro.core.vectorize.select_tile`); the chosen factors show
+    up in ``app.schedule.describe()``.
     """
     sched: Schedule = build_schedule(
         graph, canonicalize=canonicalize, strict=strict, passes=passes,

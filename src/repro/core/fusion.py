@@ -36,7 +36,7 @@ from jax.experimental import pallas as pl
 from repro.core.graph import (Channel, DataflowGraph, GraphError, Stage,
                               _apply_stage_reference)
 from repro.core.schedule import FusionGroup, Schedule, build_schedule
-from repro.core.vectorize import TPUSpec, V5E, choose_tile
+from repro.core.vectorize import TPUSpec, V5E, select_tile
 
 __all__ = ["lower_group", "lower_graph", "BACKENDS"]
 
@@ -46,12 +46,19 @@ BACKENDS = ("xla", "xla_staged", "pallas")
 # ----------------------------------------------------------------------
 # XLA backends
 # ----------------------------------------------------------------------
-def lower_group_xla(group: FusionGroup, staged: bool = False) -> Callable:
+def lower_group_xla(group: FusionGroup, staged: bool = False,
+                    valid_rows: tuple[int, int] | None = None) -> Callable:
     """Compose the group's stages as whole-array jnp ops.
 
     With ``staged=True`` an optimization barrier follows every stage, so
     XLA cannot fuse across stages — each intermediate round-trips
     through HBM, exactly like AnyHLS' disjoint IP blocks.
+
+    ``valid_rows=(r0, r1)`` narrows the logical image to that row band:
+    every stage output is zeroed outside it, reproducing the per-stage
+    zero-padding semantics of a *window* of a larger plane.  The
+    replicator (:mod:`repro.parallel.replicate`) uses this for shards
+    at the global top/bottom edge.
     """
 
     def run(env_in: dict[Channel, Any]) -> dict[Channel, Any]:
@@ -60,6 +67,8 @@ def lower_group_xla(group: FusionGroup, staged: bool = False) -> Callable:
             vals = [env[c] for c in st.inputs]
             outs = _apply_stage_reference(st, vals)
             outs = [o.astype(c.dtype) for o, c in zip(outs, st.outputs)]
+            if valid_rows is not None:
+                outs = [_window_rows(o, valid_rows) for o in outs]
             if staged:
                 outs = list(lax.optimization_barrier(tuple(outs)))
             for ch, v in zip(st.outputs, outs):
@@ -69,19 +78,30 @@ def lower_group_xla(group: FusionGroup, staged: bool = False) -> Callable:
     return run
 
 
+def _window_rows(x, valid_rows: tuple[int, int]):
+    """Zero rows of a 2-D plane outside the [r0, r1) band."""
+    if getattr(x, "ndim", 0) != 2:
+        return x
+    r0, r1 = valid_rows
+    rows = lax.broadcasted_iota(jnp.int32, x.shape, 0)
+    return jnp.where((rows >= r0) & (rows < r1), x, jnp.zeros_like(x))
+
+
 # ----------------------------------------------------------------------
 # Pallas streaming backend (the generated top-level kernel)
 # ----------------------------------------------------------------------
 def lower_group_pallas(group: FusionGroup, spec: TPUSpec = V5E,
-                       vector_factor: int = 1,
-                       interpret: bool = True) -> Callable:
+                       vector_factor: int | None = None,
+                       interpret: bool = True,
+                       valid_rows: tuple[int, int] | None = None) -> Callable:
     if group.is_trivial:
         raise GraphError("cannot pallas-lower a custom/reduce group")
-    tile = group.tile or choose_tile(group, spec, vector_factor)
+    tile = group.tile or select_tile(group, spec, vector_factor)[0]
     th, tw = tile
     H, W = group.stages[0].outputs[0].shape
     Hp, Wp = _round_up(H, th), _round_up(W, tw)
     grid = (Hp // th, Wp // tw)
+    rows = valid_rows if valid_rows is not None else (0, H)
 
     in_specs = []
     for ch in group.inputs:
@@ -96,7 +116,7 @@ def lower_group_pallas(group: FusionGroup, spec: TPUSpec = V5E,
 
     kernel = functools.partial(
         _group_kernel, group=group, tile=tile, plane=(H, W),
-        n_in=len(group.inputs))
+        n_in=len(group.inputs), rows=rows)
 
     call = pl.pallas_call(
         kernel, grid=grid, in_specs=in_specs, out_specs=out_specs,
@@ -140,7 +160,8 @@ def _in_index(i, j, *, th, tw):
 
 
 def _group_kernel(*refs, group: FusionGroup, tile: tuple[int, int],
-                  plane: tuple[int, int], n_in: int) -> None:
+                  plane: tuple[int, int], n_in: int,
+                  rows: tuple[int, int]) -> None:
     th, tw = tile
     H, W = plane
     in_refs, out_refs = refs[:n_in], refs[n_in:]
@@ -164,7 +185,7 @@ def _group_kernel(*refs, group: FusionGroup, tile: tuple[int, int],
             v = _crop(v, oh, ch_halo, th, tw).astype(ch.dtype)
             # zero outside the logical image: reproduces per-stage
             # zero-padding semantics bit-exactly at tile borders.
-            env[ch] = _mask_to_image(v, ch_halo, i, j, th, tw, H, W)
+            env[ch] = _mask_to_image(v, ch_halo, i, j, th, tw, rows, W)
 
     for ch, ref in zip(group.outputs, out_refs):
         ref[...] = _crop(env[ch], halo.get(ch, (0, 0)), (0, 0), th, tw)
@@ -206,11 +227,12 @@ def _apply_stage_tile(st: Stage, vals: list, oh: tuple[int, int],
 
 
 def _mask_to_image(v, oh: tuple[int, int], i, j, th: int, tw: int,
-                   H: int, W: int):
+                   row_band: tuple[int, int], W: int):
     eh, ew = th + 2 * oh[0], tw + 2 * oh[1]
+    r0, r1 = row_band
     rows = lax.broadcasted_iota(jnp.int32, (eh, ew), 0) + i * th - oh[0]
     cols = lax.broadcasted_iota(jnp.int32, (eh, ew), 1) + j * tw - oh[1]
-    ok = (rows >= 0) & (rows < H) & (cols >= 0) & (cols < W)
+    ok = (rows >= r0) & (rows < r1) & (cols >= 0) & (cols < W)
     return jnp.where(ok, v, jnp.zeros_like(v))
 
 
@@ -218,20 +240,27 @@ def _mask_to_image(v, oh: tuple[int, int], i, j, th: int, tw: int,
 # whole-graph lowering
 # ----------------------------------------------------------------------
 def lower_group(group: FusionGroup, backend: str, spec: TPUSpec = V5E,
-                vector_factor: int = 1, interpret: bool = True) -> Callable:
+                vector_factor: int | None = None,
+                interpret: bool = True,
+                valid_rows: tuple[int, int] | None = None) -> Callable:
+    # valid_rows applies to trivial groups too: a 2-D custom/reduce
+    # output outside the row band must read as zero downstream
+    # (_window_rows no-ops on non-2-D outputs)
     if group.is_trivial or backend == "xla":
-        return lower_group_xla(group, staged=False)
+        return lower_group_xla(group, staged=False, valid_rows=valid_rows)
     if backend == "xla_staged":
-        return lower_group_xla(group, staged=True)
+        return lower_group_xla(group, staged=True, valid_rows=valid_rows)
     if backend == "pallas":
-        return lower_group_pallas(group, spec, vector_factor, interpret)
+        return lower_group_pallas(group, spec, vector_factor, interpret,
+                                  valid_rows=valid_rows)
     raise GraphError(f"unknown backend {backend!r}; choose from {BACKENDS}")
 
 
 def lower_graph(graph: DataflowGraph, backend: str = "pallas",
                 schedule: Schedule | None = None, spec: TPUSpec = V5E,
-                vector_factor: int = 1, interpret: bool = True, *,
+                vector_factor: int | None = None, interpret: bool = True, *,
                 canonicalize: bool = True, strict: bool = False,
+                valid_rows: tuple[int, int] | None = None,
                 ) -> tuple[Callable, Schedule]:
     """Lower a whole dataflow graph; returns ``(run, schedule)``.
 
@@ -247,7 +276,8 @@ def lower_graph(graph: DataflowGraph, backend: str = "pallas",
                                        strict=strict, spec=spec,
                                        vector_factor=vector_factor)
     graph = sched.graph
-    fns = [lower_group(g, backend, spec, vector_factor, interpret)
+    fns = [lower_group(g, backend, spec, vector_factor, interpret,
+                       valid_rows=valid_rows)
            for g in sched.groups]
 
     def run(inputs: dict[str, Any]) -> dict[str, Any]:

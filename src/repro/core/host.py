@@ -164,7 +164,10 @@ class CompiledApp:
                 lines.append(f"q.enqueueWriteBuffer({b.name}, ...);  // H2D")
         for gi, g in enumerate(self.schedule.groups):
             names = ",".join(s.name for s in g.stages)
-            lines.append(f"launch kernel[{gi}]  // dataflow tasks: {names}")
+            vec = (f" tile={g.tile} vector_factor={g.vector_factor}"
+                   if g.tile is not None else "")
+            lines.append(f"launch kernel[{gi}]  "
+                         f"// dataflow tasks: {names}{vec}")
         for b in self.buffers:
             if b.direction == "out":
                 lines.append(f"q.enqueueReadBuffer({b.name}, ...);   // D2H")

@@ -61,6 +61,9 @@ class FusionGroup:
     halo: dict[Channel, tuple[int, int]]
     #: selected tile (th, tw); filled in by the vectorizer
     tile: tuple[int, int] | None = None
+    #: vector factor behind the selected tile (tw == 128 * vector_factor);
+    #: set by choose_tile/select_tile alongside ``tile``
+    vector_factor: int | None = None
 
     @property
     def is_trivial(self) -> bool:
@@ -117,6 +120,9 @@ class Schedule:
             lines.append(f"    inputs={[c.name for c in g.inputs]} "
                          f"outputs={[c.name for c in g.outputs]} "
                          f"fifo={[c.name for c in g.internal]}")
+            if g.tile is not None:
+                lines.append(f"    tile={g.tile} "
+                             f"vector_factor={g.vector_factor}")
         lines.append("  bundles: " + ", ".join(
             f"{c.name}->mem{b}" for c, b in self.bundles.items()))
         if self.diagnostics:
@@ -128,13 +134,17 @@ class Schedule:
 def build_schedule(graph: DataflowGraph, n_bundles: int = 4, *,
                    canonicalize: bool = True, strict: bool = False,
                    passes: Sequence[Pass] | PassPipeline | None = None,
-                   spec=None, vector_factor: int = 1) -> Schedule:
+                   spec=None, vector_factor: int | None = None) -> Schedule:
     """Canonicalize, validate and partition ``graph`` into fusion groups.
 
     ``strict=True`` skips canonicalization and enforces the paper's
     explicit canonical form (multi-reader channels raise).  ``passes``
-    overrides the default pipeline; ``spec``/``vector_factor`` feed the
-    VMEM feasibility check of the fusion search (default: TPU v5e).
+    overrides the default pipeline; ``spec`` feeds the VMEM feasibility
+    check of the fusion search (default: TPU v5e).  ``vector_factor``
+    forces one datapath width for every group; ``None`` (the default)
+    sweeps the factor per group through the DMA cost model
+    (:func:`repro.core.vectorize.select_tile`) and logs the choice in
+    the schedule diagnostics.
     """
     diagnostics: list[str] = []
     if canonicalize and not strict:
@@ -147,8 +157,38 @@ def build_schedule(graph: DataflowGraph, n_bundles: int = 4, *,
     groups, fusion_diags = _partition_groups(graph, order, spec,
                                              vector_factor)
     diagnostics.extend(fusion_diags)
+    diagnostics.extend(_select_tiles(groups, spec, vector_factor))
     bundles = _assign_bundles(graph, n_bundles)
     return Schedule(graph, order, groups, bundles, n_bundles, diagnostics)
+
+
+def _select_tiles(groups: list[FusionGroup], spec,
+                  vector_factor: int | None) -> list[str]:
+    """Per-group tile/vector-factor selection (post-partition).
+
+    Forced mode pins every group to one factor; auto mode sweeps per
+    group — different plane widths in one graph can land on different
+    datapath widths.
+    """
+    from repro.core.vectorize import V5E, select_tile
+    diags: list[str] = []
+    for g in groups:
+        if g.is_trivial:
+            continue
+        tile, sweep = select_tile(g, spec or V5E, vector_factor)
+        names = ",".join(s.name for s in g.stages)
+        if sweep is not None:
+            tried = ",".join(
+                f"vf{r['vector_factor']}="
+                + (f"{r['modeled_s'] * 1e6:.1f}us" if r["feasible"]
+                   else "infeasible")
+                for r in sweep)
+            diags.append(f"[vectorize] {{{names}}}: swept {tried} -> "
+                         f"vector_factor={g.vector_factor} tile={tile}")
+        else:
+            diags.append(f"[vectorize] {{{names}}}: forced "
+                         f"vector_factor={g.vector_factor} tile={tile}")
+    return diags
 
 
 # ----------------------------------------------------------------------
@@ -160,7 +200,7 @@ def _is_fusible(st: Stage) -> bool:
 
 
 def _partition_groups(graph: DataflowGraph, order: list[Stage],
-                      spec=None, vector_factor: int = 1
+                      spec=None, vector_factor: int | None = None
                       ) -> tuple[list[FusionGroup], list[str]]:
     """Grow maximal convex fusion groups over the stage DAG.
 
@@ -219,11 +259,14 @@ def _partition_groups(graph: DataflowGraph, order: list[Stage],
     _lat_cache: dict[int, float] = {}
 
     def fits_vmem(mask: int) -> bool:
+        # feasibility floor: a forced factor must fit every merged
+        # group; in auto-sweep mode the narrowest datapath (vf=1) is
+        # the existence check — select_tile widens afterwards.
         if mask not in _fits_cache:
             from repro.core.vectorize import V5E, choose_tile
             g = make_group(mask)
             try:
-                choose_tile(g, spec or V5E, vector_factor)
+                choose_tile(g, spec or V5E, vector_factor or 1)
                 _fits_cache[mask] = True
             except ValueError:
                 _fits_cache[mask] = False

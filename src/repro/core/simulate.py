@@ -47,11 +47,17 @@ def analytic_latency(tasks: list[TaskTiming], n_items: int
     drains at the rate of the slowest task::
 
         T_flow = sum_i fill_i + n * max_i ii_i
+
+    ``n_items=0`` is legal (an idle pipeline): both latencies collapse
+    to the fill terms, and a fully zero-cost pipeline reports speedup
+    1.0 instead of dividing by zero.
     """
+    if n_items < 0:
+        raise ValueError(f"n_items must be >= 0, got {n_items}")
     t_seq = sum(t.fill + n_items * t.ii for t in tasks)
     t_flow = sum(t.fill for t in tasks) + n_items * max(t.ii for t in tasks)
     return {"sequential": t_seq, "dataflow": t_flow,
-            "speedup": t_seq / t_flow}
+            "speedup": t_seq / t_flow if t_flow > 0 else 1.0}
 
 
 def simulate_pipeline(tasks: list[TaskTiming], n_items: int,
@@ -72,6 +78,9 @@ def simulate_pipeline(tasks: list[TaskTiming], n_items: int,
     paper's "when a task stalls ... other tasks continue running as
     long as there is enough data in their input buffers").
     """
+    if n_items < 1:
+        raise ValueError(f"simulate_pipeline needs n_items >= 1, "
+                         f"got {n_items}")
     rng = np.random.default_rng(seed)
     S = len(tasks)
     c = np.zeros((S, n_items))
@@ -90,7 +99,13 @@ def simulate_pipeline(tasks: list[TaskTiming], n_items: int,
     total = float(c[-1, -1])
     seq = float(sum(t.fill + (n_items * t.ii) for t in tasks)
                 + jit.sum())
+    # steady rate over the back half: items n//2 .. n-1 span
+    # n-1-n//2 completion intervals (NOT n-n//2 — fenceposts).  For
+    # constant ii and depth >= 1 this equals max_i ii_i exactly.
+    intervals = n_items - 1 - n_items // 2
+    if intervals > 0:
+        steady = float((c[-1, -1] - c[-1, n_items // 2]) / intervals)
+    else:
+        steady = total / n_items
     return {"dataflow_sim": total, "sequential": seq,
-            "speedup": seq / total,
-            "steady_rate": float((c[-1, -1] - c[-1, n_items // 2])
-                                 / (n_items - n_items // 2))}
+            "speedup": seq / total, "steady_rate": steady}

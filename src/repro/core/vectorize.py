@@ -7,9 +7,21 @@ streamed tile so its minor dimension is a multiple of the 128-lane VPU
 the double-buffered working set of the whole fused group fits in VMEM.
 
 The *vector factor* maps to how many 128-lane vectors a tile row
-carries; the *burst length* maps to the tile byte count per DMA
-(bigger tiles == longer HBM bursts == better DMA efficiency, up to the
-VMEM budget).
+carries (``tw == 128 * vector_factor``); the *burst length* maps to
+the tile byte count per DMA (bigger tiles == longer HBM bursts ==
+better DMA efficiency, up to the VMEM budget).
+
+Two entry points:
+
+- :func:`choose_tile` — the paper's *explicit* knob: the caller fixes
+  the vector factor, we fit the tallest tile that holds the VMEM
+  budget, or raise when the factor cannot fit the plane / ``max_tile``.
+- :func:`select_tile` — the *automatic* mode used by the compiler
+  driver: sweep every feasible vector factor through a DMA-efficiency
+  cost model (:func:`modeled_plane_time`) and keep the fastest.  The
+  sweep is what replaces a hardcoded default: wide tiles amortize the
+  per-burst overhead, but over-wide tiles pay for padded columns when
+  the plane width is not a multiple, and the model prices both.
 """
 from __future__ import annotations
 
@@ -19,7 +31,8 @@ import numpy as np
 
 from repro.core.schedule import FusionGroup
 
-__all__ = ["TPUSpec", "choose_tile", "vmem_report"]
+__all__ = ["TPUSpec", "choose_tile", "select_tile", "sweep_vector_factor",
+           "modeled_plane_time", "vmem_report"]
 
 LANE = 128     # VPU/MXU lane width
 SUBLANE = 8    # float32 sublane rows
@@ -34,6 +47,10 @@ class TPUSpec:
     peak_flops_bf16: float = 197e12
     hbm_bw: float = 819e9
     ici_bw_per_link: float = 50e9
+    clock_hz: float = 940e6
+    #: fixed per-grid-step cost (DMA issue / burst setup) the sweep
+    #: amortizes by widening tiles
+    step_overhead_s: float = 1e-6
 
 
 V5E = TPUSpec()
@@ -42,35 +59,143 @@ V5E = TPUSpec()
 def choose_tile(group: FusionGroup, spec: TPUSpec = V5E,
                 vector_factor: int = 1,
                 max_tile: tuple[int, int] = (256, 1024)) -> tuple[int, int]:
-    """Pick (th, tw) for a fusion group.
+    """Pick (th, tw) for a fusion group at a fixed vector factor.
 
-    Start from the largest hardware-aligned tile `<= max_tile` bounded
-    by the plane shape; shrink rows first (keeps lane utilization),
-    then lanes, until the double-buffered VMEM budget holds.
-    ``vector_factor`` forces the minor dim to ``128 * vector_factor``
-    at minimum — the paper's explicit vectorization knob.
+    ``tw`` is exactly ``128 * vector_factor`` — the paper's explicit
+    vectorization knob sets the datapath width.  ``th`` starts at the
+    largest hardware-aligned height ``<= max_tile[0]`` bounded by the
+    plane, then shrinks until the double-buffered VMEM budget holds.
+
+    Raises :class:`ValueError` when the requested factor cannot fit —
+    either because ``128 * vector_factor`` exceeds ``max_tile[1]`` or
+    the lane-rounded plane width, or because even the minimal
+    ``(SUBLANE, tw)`` tile blows the VMEM budget.
     """
+    if vector_factor < 1:
+        raise ValueError(f"vector_factor must be >= 1, got {vector_factor}")
     shape = group.stages[0].outputs[0].shape
     if len(shape) != 2:
         raise ValueError(f"generic fusion tiles 2-D planes, got {shape}")
     H, W = shape
-    tw = min(_round_up(min(W, max_tile[1]), LANE), _round_up(W, LANE))
-    tw = max(tw, LANE * vector_factor)
-    th = min(_round_up(min(H, max_tile[0]), SUBLANE), _round_up(H, SUBLANE))
+    tw = LANE * vector_factor
+    # clamp BEFORE committing to the factor: a tile wider than the
+    # lane-rounded plane only streams padding, and max_tile is a hard
+    # cap — the old code applied the factor after clamping and silently
+    # exceeded both.
+    cap_tw = min(_round_up(W, LANE), max(LANE, (max_tile[1] // LANE) * LANE))
+    if tw > cap_tw:
+        raise ValueError(
+            f"vector_factor={vector_factor} needs a {tw}-lane-wide tile, "
+            f"but the widest feasible tile is {cap_tw} "
+            f"(plane width {W} -> {_round_up(W, LANE)} lane-rounded, "
+            f"max_tile[1]={max_tile[1]})")
+    th = min(_round_up(H, SUBLANE),
+             max(SUBLANE, (max_tile[0] // SUBLANE) * SUBLANE))
 
     while group.vmem_bytes((th, tw)) > spec.vmem_bytes:
         if th > SUBLANE:
             th = max(SUBLANE, th // 2)
-        elif tw > LANE * vector_factor:
-            tw = max(LANE * vector_factor, tw // 2)
         else:
             raise ValueError(
                 f"group {[s.name for s in group.stages]} cannot fit VMEM "
                 f"budget {spec.vmem_bytes} even at minimal tile "
-                f"({SUBLANE}, {LANE * vector_factor}): "
+                f"({SUBLANE}, {tw}) for vector_factor={vector_factor}: "
                 f"{group.vmem_bytes((th, tw))} bytes")
     group.tile = (th, tw)
+    group.vector_factor = vector_factor
     return group.tile
+
+
+def modeled_plane_time(group: FusionGroup, tile: tuple[int, int],
+                       spec: TPUSpec = V5E) -> float:
+    """Modeled seconds to stream the whole plane through the kernel.
+
+    Per grid step the kernel bursts every (halo-expanded) input tile
+    HBM->VMEM, computes, and bursts the output tiles back; DMA and
+    compute overlap (double buffering), and each step pays a fixed
+    issue overhead.  Padded rows/columns are priced: the grid covers
+    the tile-rounded plane, so an over-wide tile on a narrow plane
+    streams dead columns.
+    """
+    th, tw = tile
+    H, W = group.stages[0].outputs[0].shape
+    grid = (_round_up(H, th) // th) * (_round_up(W, tw) // tw)
+    bytes_step = 0
+    for ch in group.inputs:
+        hy, hx = group.halo.get(ch, (0, 0))
+        bytes_step += (th + 2 * hy) * (tw + 2 * hx) * np.dtype(ch.dtype).itemsize
+    for ch in group.outputs:
+        bytes_step += th * tw * np.dtype(ch.dtype).itemsize
+    dma_s = bytes_step / spec.hbm_bw
+    compute_s = sum(st.ii for st in group.stages) * th * tw / spec.clock_hz
+    return grid * (spec.step_overhead_s + max(dma_s, compute_s))
+
+
+def sweep_vector_factor(group: FusionGroup, spec: TPUSpec = V5E,
+                        max_tile: tuple[int, int] = (256, 1024),
+                        candidates: tuple[int, ...] | None = None
+                        ) -> list[dict]:
+    """Cost-model sweep over vector factors; one record per candidate.
+
+    Default candidates run 1..cap (every factor the plane/max_tile can
+    hold, plus one infeasible sentinel so callers can check that
+    feasibility is monotone).  Each record carries ``vector_factor``,
+    ``feasible``, the chosen ``tile`` and ``modeled_s``.
+    """
+    shape = group.stages[0].outputs[0].shape
+    H, W = shape
+    cap_tw = min(_round_up(W, LANE), max(LANE, (max_tile[1] // LANE) * LANE))
+    if candidates is None:
+        candidates = tuple(range(1, cap_tw // LANE + 2))
+    records: list[dict] = []
+    prev = (group.tile, group.vector_factor)
+    try:
+        for vf in candidates:
+            try:
+                tile = choose_tile(group, spec, vf, max_tile)
+            except ValueError as e:
+                records.append({"vector_factor": vf, "feasible": False,
+                                "tile": None, "modeled_s": float("inf"),
+                                "reason": str(e)})
+                continue
+            records.append({"vector_factor": vf, "feasible": True,
+                            "tile": tile,
+                            "modeled_s": modeled_plane_time(group, tile,
+                                                            spec)})
+    finally:
+        # the sweep only *scores*; choose_tile/select_tile commit.
+        # Without the restore, a standalone sweep would pin the group
+        # to the last candidate tried, not the chosen tile.
+        group.tile, group.vector_factor = prev
+    return records
+
+
+def select_tile(group: FusionGroup, spec: TPUSpec = V5E,
+                vector_factor: int | None = None,
+                max_tile: tuple[int, int] = (256, 1024)
+                ) -> tuple[tuple[int, int], list[dict] | None]:
+    """Pick the group's tile; sweep the vector factor when not forced.
+
+    ``vector_factor=None`` runs :func:`sweep_vector_factor` and keeps
+    the fastest feasible candidate (ties break toward the wider tile —
+    longer bursts).  An explicit factor forwards to
+    :func:`choose_tile`.  Returns ``(tile, sweep_records)`` with
+    ``sweep_records=None`` in forced mode; the group's ``tile`` and
+    ``vector_factor`` fields are set either way.
+    """
+    if vector_factor is not None:
+        return choose_tile(group, spec, vector_factor, max_tile), None
+    records = sweep_vector_factor(group, spec, max_tile)
+    feasible = [r for r in records if r["feasible"]]
+    if not feasible:
+        raise ValueError(
+            f"no feasible vector factor for group "
+            f"{[s.name for s in group.stages]}: "
+            f"{records[0].get('reason', 'no candidates')}")
+    best = min(feasible, key=lambda r: (r["modeled_s"], -r["vector_factor"]))
+    group.tile = best["tile"]
+    group.vector_factor = best["vector_factor"]
+    return group.tile, records
 
 
 def vmem_report(group: FusionGroup) -> dict:

@@ -17,7 +17,30 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.parallel._compat import shard_map
 
 __all__ = ["ring_allgather_matmul", "ring_matmul_reducescatter",
-           "psum_scatter_grads"]
+           "psum_scatter_grads", "halo_exchange_rows"]
+
+
+def halo_exchange_rows(x: jnp.ndarray, hy: int, n_shards: int,
+                       axis: str = "replica") -> jnp.ndarray:
+    """Row-halo exchange for a row-partitioned 2-D plane (shard_map body).
+
+    Each shard holds ``(H/k, W)`` rows; stencils near the cut need
+    ``hy`` rows from the neighbouring shards.  The top shard's upper
+    halo and the bottom shard's lower halo have no neighbour —
+    ``ppermute`` leaves zeros there, which is exactly the compiler's
+    zero-padding boundary semantics, so the replicated app reproduces
+    the single-device app bit-for-bit.  With one shard both perms are
+    empty and the whole halo is zeros: the single-device fallback runs
+    the same code path CI exercises on CPU.
+    """
+    if hy == 0:
+        return x
+    # my bottom rows become the next shard's upper halo, and vice versa
+    from_above = jax.lax.ppermute(
+        x[-hy:], axis, [(j, j + 1) for j in range(n_shards - 1)])
+    from_below = jax.lax.ppermute(
+        x[:hy], axis, [(j + 1, j) for j in range(n_shards - 1)])
+    return jnp.concatenate([from_above, x, from_below], axis=0)
 
 
 def ring_allgather_matmul(x: jnp.ndarray, w: jnp.ndarray, mesh: Mesh,

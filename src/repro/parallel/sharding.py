@@ -24,7 +24,27 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = ["ShardingRules", "TRAIN_RULES", "SERVE_RULES",
            "make_param_shardings", "make_activation_fn", "mesh_axis_size",
-           "spec_for_axes"]
+           "spec_for_axes", "replica_mesh"]
+
+
+def replica_mesh(n_replicas: int | None = None, axis: str = "replica",
+                 devices: list | None = None) -> Mesh:
+    """A 1-D mesh of ``n_replicas`` devices for data-parallel farms.
+
+    Used by :mod:`repro.parallel.replicate` (spatial plane replication)
+    and the serving runtime's replicated micro-batcher.  Defaults to
+    every visible device; asks for more than exist -> clear error.
+    """
+    devs = list(devices if devices is not None else jax.devices())
+    k = n_replicas if n_replicas is not None else len(devs)
+    if k < 1:
+        raise ValueError(f"n_replicas must be >= 1, got {k}")
+    if k > len(devs):
+        raise ValueError(
+            f"asked for {k} replicas but only {len(devs)} devices are "
+            f"visible (set --xla_force_host_platform_device_count for "
+            f"CPU testing)")
+    return Mesh(np.asarray(devs[:k]), (axis,))
 
 AxisBinding = Any  # str | tuple[str, ...] | None
 

@@ -9,6 +9,14 @@ with every input donated — the stacked staging buffers are created
 per batch and never reused, so their HBM can be recycled in place,
 the launcher-level analogue of the paper's buffer reuse between
 command-queue runs.
+
+With ``replicas > 1`` the padded batch is additionally *sharded* over
+a 1-D device mesh: replica ``r`` executes rows ``[r*B/k, (r+1)*B/k)``
+of every staging buffer — the batch-parallel farm (FastFlow's
+``ff_farm`` worker replication, FLOWER's kernel replication) on top of
+the same single-launch dispatch.  The padded width is held to a
+multiple of the replica count so every launch keeps one compiled
+kernel shape per replica.
 """
 from __future__ import annotations
 
@@ -18,6 +26,7 @@ from typing import Any, Callable, Sequence
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.host import CompiledApp
 
@@ -32,21 +41,50 @@ class MicroBatcher:
     (double buffering) before forcing the first to host memory.
     """
 
-    def __init__(self, max_batch: int = 8, donate: bool = True):
+    def __init__(self, max_batch: int = 8, donate: bool = True,
+                 replicas: int = 1, replica_axis: str = "replica",
+                 devices: list | None = None):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        if replicas < 1:
+            raise ValueError(f"replicas must be >= 1, got {replicas}")
+        if max_batch % replicas != 0:
+            raise ValueError(
+                f"max_batch={max_batch} must divide evenly over "
+                f"replicas={replicas}: every replica serves "
+                f"max_batch/replicas rows of the padded batch")
         self.max_batch = max_batch
         self.donate = donate
+        self.replicas = replicas
+        self.replica_axis = replica_axis
+        self._mesh = None
+        if replicas > 1:
+            from repro.parallel.sharding import replica_mesh
+            self._mesh = replica_mesh(replicas, axis=replica_axis,
+                                      devices=devices)
         self._fns: dict[str, Callable] = {}
 
     def batched_fn(self, app: CompiledApp) -> Callable:
-        """The jitted, vmapped, input-donating kernel for ``app``."""
+        """The jitted, vmapped, input-donating kernel for ``app``.
+
+        With replicas, batch-dim shardings on every input/output place
+        each replica's rows on its own device; XLA then runs the k
+        copies of the kernel concurrently with no cross-device traffic
+        (the farm has no inter-worker channels).
+        """
         sig = app.signature()
         fn = self._fns.get(sig)
         if fn is None:
             donate_argnums = (tuple(range(len(app.input_names)))
                               if self.donate else ())
-            fn = jax.jit(jax.vmap(app.fn), donate_argnums=donate_argnums)
+            kwargs: dict[str, Any] = dict(donate_argnums=donate_argnums)
+            if self._mesh is not None:
+                batch_row = NamedSharding(self._mesh, P(self.replica_axis))
+                kwargs["in_shardings"] = tuple(
+                    batch_row for _ in app.input_names)
+                kwargs["out_shardings"] = tuple(
+                    batch_row for _ in app.output_names)
+            fn = jax.jit(jax.vmap(app.fn), **kwargs)
             self._fns[sig] = fn
         return fn
 
@@ -56,16 +94,33 @@ class MicroBatcher:
 
         With ``pad_to`` the batch is padded (repeating the last row) to
         a fixed width, so every launch reuses ONE compiled kernel shape
-        instead of re-tracing per ragged batch size.
+        instead of re-tracing per ragged batch size; the width is
+        always rounded up to a multiple of the replica count.  Rejects
+        an empty request list and per-request shape mismatches with
+        precise errors instead of letting ``np.stack`` fail obscurely —
+        the engine's ``_next_batch`` can race to empty at shutdown, and
+        a 0-d/scalar channel input must stack to a ``(B,)`` staging
+        buffer, not crash.
         """
+        if not requests:
+            raise ValueError(
+                "cannot stack an empty request batch (engine shutdown "
+                "race?); callers must skip empty batches")
         width = max(pad_to or 0, len(requests))
+        width = -(-width // self.replicas) * self.replicas
         args = []
         for ch in app.graph.graph_inputs:
             # stack on the host (one memcpy per row) so the launch
             # transfers ONE contiguous staging buffer instead of
             # dispatching a per-row device op
-            rows = [np.asarray(r.inputs[ch.name],
-                               dtype=np.dtype(ch.dtype)) for r in requests]
+            rows = []
+            for idx, r in enumerate(requests):
+                row = np.asarray(r.inputs[ch.name], dtype=np.dtype(ch.dtype))
+                if row.shape != tuple(ch.shape):
+                    raise ValueError(
+                        f"request[{idx}] input {ch.name!r}: expected "
+                        f"shape {tuple(ch.shape)}, got {row.shape}")
+                rows.append(row)
             rows.extend(rows[-1:] * (width - len(rows)))
             args.append(np.stack(rows))
         return args

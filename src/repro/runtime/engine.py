@@ -101,12 +101,17 @@ class StreamEngine:
     ``max_queue`` is the FIFO depth of the request queue (the
     backpressure bound), ``max_batch`` the micro-batch width,
     ``inflight`` the number of outstanding kernel launches (2 ==
-    double buffering).  Extra keyword arguments are forwarded to
+    double buffering).  ``replicas=k`` shards every padded micro-batch
+    across k devices — the batch-parallel farm: each device runs one
+    full pipeline replica on ``max_batch/k`` rows, and the report shows
+    measured per-replica throughput next to the model's predicted
+    linear scaling.  Extra keyword arguments are forwarded to
     :func:`repro.core.compiler.compile_graph` on cache misses.
     """
 
     def __init__(self, *, backend: str = "pallas", max_queue: int = 64,
                  max_batch: int = 8, inflight: int = 2, donate: bool = True,
+                 replicas: int = 1,
                  cache: CompileCache | None = None,
                  telemetry: Telemetry | None = None,
                  poll_interval: float = 0.005, linger: float = 0.002,
@@ -114,13 +119,16 @@ class StreamEngine:
         self.backend = backend
         self.max_queue = max_queue
         self.max_batch = max_batch
+        self.replicas = replicas
         self.cache = cache or CompileCache()
         self.telemetry = telemetry or Telemetry()
+        self.telemetry.replicas = replicas
         self._compile_kwargs = compile_kwargs
         self._queue: _queue.Queue[StreamRequest] = _queue.Queue(max_queue)
         self._carry: deque[StreamRequest] = deque()
         self._pool = SlotPool(inflight)
-        self._batcher = MicroBatcher(max_batch=max_batch, donate=donate)
+        self._batcher = MicroBatcher(max_batch=max_batch, donate=donate,
+                                     replicas=replicas)
         self._apps: dict[str, CompiledApp] = {}
         self._poll = poll_interval
         self._linger = linger
@@ -186,7 +194,8 @@ class StreamEngine:
             key = app.graph.name
             if key in modeled:               # names are arbitrary labels
                 key = f"{key}@{sig[:6]}"
-            modeled[key] = modeled_latency(app, n, depth=self.max_queue)
+            modeled[key] = modeled_latency(app, n, depth=self.max_queue,
+                                           replicas=self.replicas)
         return self.telemetry.report(cache=self.cache, modeled=modeled)
 
     # ------------------------------------------------------------------

@@ -29,8 +29,8 @@ _MAX_SAMPLES = 100_000
 _SIM_ITEMS_CAP = 512
 
 
-def modeled_latency(app: Any, n_items: int, depth: int = 2
-                    ) -> dict[str, float]:
+def modeled_latency(app: Any, n_items: int, depth: int = 2,
+                    replicas: int = 1) -> dict[str, float]:
     """Fig. 1 predictions for serving ``n_items`` requests through ``app``.
 
     Tasks are the app's scheduled stages bracketed by the generated
@@ -39,6 +39,14 @@ def modeled_latency(app: Any, n_items: int, depth: int = 2
     queues.  Returns the closed-form ``sequential`` / ``dataflow``
     cycles plus the finite-depth discrete simulation
     (``dataflow_sim``), so backpressure effects are visible too.
+
+    ``replicas > 1`` adds the batch-parallel-farm prediction: k
+    identical pipelines each drain ``ceil(n/k)`` items, so the
+    replicated latency is the dataflow latency of the per-replica
+    share — linear scaling in the drain term (the farm's workers
+    share no channels), with the fill paid once per replica in
+    parallel.  ``replica_scaling_modeled`` is the predicted speedup of
+    the farm over one replica.
     """
     tasks = ([TaskTiming("read", ii=1.0, fill=32.0)]
              + [TaskTiming(s.name, ii=s.ii, fill=s.fill)
@@ -49,6 +57,12 @@ def modeled_latency(app: Any, n_items: int, depth: int = 2
     sim = simulate_pipeline(tasks, min(n, _SIM_ITEMS_CAP),
                             depth=max(1, depth))
     out["dataflow_sim"] = sim["dataflow_sim"]
+    if replicas > 1:
+        per_replica = -(-n // replicas)
+        out["dataflow_replicated"] = analytic_latency(
+            tasks, per_replica)["dataflow"]
+        out["replica_scaling_modeled"] = (out["dataflow"]
+                                          / out["dataflow_replicated"])
     return out
 
 
@@ -64,6 +78,11 @@ class Telemetry:
         self._t_last: float | None = None
         self.completed = 0
         self.submitted = 0
+        #: device-farm width the served throughput is spread over;
+        #: owned by the engine (it sets this to its ``replicas``) so
+        #: reports show per-replica throughput next to the modeled
+        #: linear scaling
+        self.replicas = 1
 
     # -- observation hooks ---------------------------------------------
     def observe_submit(self, queue_depth: int) -> None:
@@ -99,10 +118,13 @@ class Telemetry:
             span = ((self._t_last - self._t_first)
                     if (self._t_first is not None and self.completed > 1)
                     else 0.0)
+            tput = (self.completed - 1) / span if span else 0.0
             return {
                 "submitted": self.submitted,
                 "completed": self.completed,
-                "throughput_rps": (self.completed - 1) / span if span else 0.0,
+                "throughput_rps": tput,
+                "replicas": self.replicas,
+                "throughput_per_replica_rps": tput / self.replicas,
                 "latency_p50_ms": self._pct(lat, 50) * 1e3,
                 "latency_p99_ms": self._pct(lat, 99) * 1e3,
                 "latency_mean_ms": float(np.mean(lat)) * 1e3 if lat else 0.0,
