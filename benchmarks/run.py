@@ -22,6 +22,7 @@ MODULES = [
     "benchmarks.bench_kernels",
     "benchmarks.bench_serving",
     "benchmarks.bench_parallel",
+    "benchmarks.bench_tuning",
     "benchmarks.lm_roofline",
 ]
 

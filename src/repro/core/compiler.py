@@ -17,8 +17,19 @@ apps) builds on.  The phases:
    (:func:`repro.core.fusion.lower_graph`) plus generated host code
    (:func:`repro.core.host.build_host_app`).
 
-Pass diagnostics ride along on ``Schedule.diagnostics`` and show up in
+Schedule parameters (tile shape, per-group vector factor, fusion
+budget) come from one of three regimes, in increasing fidelity: the
+analytic cost-model sweep (the default), an explicit
+``vector_factor=``, or the profile-guided autotuner
+(``tune="auto"``, :mod:`repro.tune`) which *measures* model-ranked
+candidates on the live backend and persists winners in an on-disk
+:class:`~repro.tune.store.TuningCache`.  Pass diagnostics — including
+the tile-provenance lines saying which regime picked each tile — ride
+along on ``Schedule.diagnostics`` and show up in
 ``Schedule.describe()`` / ``CompiledApp.schedule.describe()``.
+
+See ``docs/architecture.md`` for the layer map and ``docs/tuning.md``
+for every schedule knob.
 """
 from __future__ import annotations
 
@@ -42,8 +53,10 @@ def compile_graph(graph: DataflowGraph, backend: str = "pallas", *,
                   mesh: Mesh | None = None,
                   data_axis: str | Sequence[str] = "data",
                   donate: Sequence[str] = (), spec: TPUSpec = V5E,
-                  vector_factor: int | None = None, interpret: bool = True,
-                  jit: bool = True) -> CompiledApp:
+                  vector_factor: int | None = None,
+                  max_tile: tuple[int, int] | None = None,
+                  tune: Any = None, tune_cache: Any = None,
+                  interpret: bool = True, jit: bool = True) -> CompiledApp:
     """Compile a dataflow graph end-to-end into a :class:`CompiledApp`.
 
     One source program, any backend — ``backend`` is one of
@@ -58,12 +71,64 @@ def compile_graph(graph: DataflowGraph, backend: str = "pallas", *,
     pins every fused kernel's tile minor dimension to ``128 * factor``
     (raising when a group cannot fit it).  The default ``None`` sweeps
     the factor per group through the DMA cost model
-    (:func:`repro.core.vectorize.select_tile`); the chosen factors show
-    up in ``app.schedule.describe()``.
+    (:func:`repro.core.vectorize.select_tile`); ``max_tile`` caps the
+    swept tile shape.  The chosen factors — and which regime chose
+    them — show up in ``app.schedule.describe()``.
+
+    ``tune`` upgrades selection from *modeled* to *measured*:
+
+    - ``"auto"`` — consult the persistent
+      :class:`~repro.tune.store.TuningCache` (``tune_cache``, default
+      on-disk location); on a miss, run the profile-guided search
+      (:func:`repro.tune.search.tune_graph`: analytic top-k prior,
+      then timed on the live backend) and persist the winner.  A
+      second compile of the same app on the same device kind performs
+      **zero** measurements.
+    - a :class:`~repro.tune.store.ScheduleConfig` — apply a known
+      config verbatim (e.g. exported from another machine's cache).
+
+    ``tune`` and ``vector_factor`` are mutually exclusive — one is a
+    measurement, the other an override.
+
+    >>> from repro.core.graph import DataflowGraph
+    >>> g = DataflowGraph("doc")
+    >>> x = g.input("img", (8, 128))
+    >>> _ = g.output(g.point(x, lambda v: v * 3.0), "out")
+    >>> app = compile_graph(g, backend="xla")
+    >>> sorted(app.input_names), sorted(app.output_names)
+    (['img'], ['out'])
+    >>> import numpy as np
+    >>> float(app(img=np.ones((8, 128), np.float32))["out"][0, 0])
+    3.0
     """
-    sched: Schedule = build_schedule(
-        graph, canonicalize=canonicalize, strict=strict, passes=passes,
-        spec=spec, vector_factor=vector_factor)
+    if tune == "model":                 # explicit name for the default
+        tune = None
+    if tune is not None and vector_factor is not None:
+        raise ValueError(
+            "tune= and vector_factor= are mutually exclusive: the tuner "
+            "owns the vector factors it measures")
+    if tune is not None and max_tile is not None:
+        raise ValueError(
+            "tune= and max_tile= are mutually exclusive: the tile cap is "
+            "one of the tuner's search axes (and part of the cached "
+            "config); pass max_tile_candidates to tune_graph instead")
+    tuned = None
+    if tune is not None:
+        from repro.tune.search import resolve_tuning, tuned_schedule_kwargs
+        tuned = resolve_tuning(graph, backend, tune=tune, spec=spec,
+                               cache=tune_cache, interpret=interpret,
+                               strict=strict, canonicalize=canonicalize,
+                               passes=passes)
+    if tuned is not None:
+        config, source, notes = tuned
+        sched: Schedule = build_schedule(
+            graph, canonicalize=canonicalize, strict=strict, passes=passes,
+            **tuned_schedule_kwargs(config, source, spec))
+        sched.diagnostics.extend(notes)
+    else:
+        sched = build_schedule(
+            graph, canonicalize=canonicalize, strict=strict, passes=passes,
+            spec=spec, vector_factor=vector_factor, max_tile=max_tile)
     run, sched = lower_graph(sched.graph, backend, schedule=sched,
                              spec=spec, vector_factor=vector_factor,
                              interpret=interpret)

@@ -260,6 +260,7 @@ def lower_graph(graph: DataflowGraph, backend: str = "pallas",
                 schedule: Schedule | None = None, spec: TPUSpec = V5E,
                 vector_factor: int | None = None, interpret: bool = True, *,
                 canonicalize: bool = True, strict: bool = False,
+                max_tile: tuple[int, int] | None = None,
                 valid_rows: tuple[int, int] | None = None,
                 ) -> tuple[Callable, Schedule]:
     """Lower a whole dataflow graph; returns ``(run, schedule)``.
@@ -267,14 +268,18 @@ def lower_graph(graph: DataflowGraph, backend: str = "pallas",
     ``run`` maps ``{input_name: array} -> {output_name: array}`` and is
     jit-compatible.  One source program, any backend — the paper's
     portability claim (Fig. 8/9) maps to ``backend=`` here.  Unless a
-    pre-built ``schedule`` is passed, the graph first goes through the
+    pre-built ``schedule`` is passed (the compiler driver and the
+    autotuner both pass one, with tiles already selected and
+    provenance-labeled), the graph first goes through the
     canonicalization pass pipeline (``strict=True`` to enforce the
     explicit canonical form instead; see
-    :func:`repro.core.schedule.build_schedule`).
+    :func:`repro.core.schedule.build_schedule`); ``max_tile`` then
+    caps the tile shapes the schedule may select.
     """
     sched = schedule or build_schedule(graph, canonicalize=canonicalize,
                                        strict=strict, spec=spec,
-                                       vector_factor=vector_factor)
+                                       vector_factor=vector_factor,
+                                       max_tile=max_tile)
     graph = sched.graph
     fns = [lower_group(g, backend, spec, vector_factor, interpret,
                        valid_rows=valid_rows)

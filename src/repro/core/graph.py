@@ -397,6 +397,14 @@ def _fn_fingerprint(fn: Any, _depth: int = 0) -> str:
     conservative: the signature then only matches the exact same
     function object, which can cost cache hits but never returns a
     wrong kernel.
+
+    Stability matters *across processes*: the persistent
+    :class:`repro.tune.store.TuningCache` keys on this digest, so the
+    fingerprint must not depend on memory addresses.  Nested code
+    objects (genexprs, inner lambdas) therefore hash structurally via
+    :func:`_code_fingerprint` — their default ``repr`` embeds an
+    ``at 0x…`` address that would silently break every cross-process
+    cache hit for stages like ``lambda p: sum(p[i] for i in range(9))``.
     """
     if fn is None:
         return "none"
@@ -407,7 +415,7 @@ def _fn_fingerprint(fn: Any, _depth: int = 0) -> str:
         if name:
             return f"{getattr(fn, '__module__', '')}.{name}"
         return f"id{id(fn)}"
-    parts = [code.co_code.hex(), repr(code.co_consts), repr(code.co_names)]
+    parts = [_code_fingerprint(code), repr(code.co_names)]
     fglobals = getattr(fn, "__globals__", {})
     for name in code.co_names:
         if name in fglobals:
@@ -418,6 +426,18 @@ def _fn_fingerprint(fn: Any, _depth: int = 0) -> str:
         parts.append(_const_fingerprint(dflt, _depth + 1))
     for cell in (fn.__closure__ or ()):
         parts.append(_const_fingerprint(cell.cell_contents, _depth + 1))
+    return hashlib.sha256("|".join(parts).encode()).hexdigest()[:12]
+
+
+def _code_fingerprint(code: Any) -> str:
+    """Address-free digest of a code object, nested code included."""
+    parts = [code.co_code.hex(), repr(code.co_names),
+             repr(code.co_varnames)]
+    for c in code.co_consts:
+        if hasattr(c, "co_code"):           # nested genexpr/lambda/comp
+            parts.append(_code_fingerprint(c))
+        else:
+            parts.append(repr(c))
     return hashlib.sha256("|".join(parts).encode()).hexdigest()[:12]
 
 

@@ -64,6 +64,11 @@ class FusionGroup:
     #: vector factor behind the selected tile (tw == 128 * vector_factor);
     #: set by choose_tile/select_tile alongside ``tile``
     vector_factor: int | None = None
+    #: why this tile was chosen: "model" (analytic sweep), "forced"
+    #: (explicit vector_factor=), "measured"/"cache"/"config" (the
+    #: autotuner, fresh / from the TuningCache / an explicit
+    #: ScheduleConfig).  Rendered by :meth:`Schedule.describe`.
+    tile_source: str = "model"
 
     @property
     def is_trivial(self) -> bool:
@@ -101,6 +106,16 @@ def _itemsize(ch: Channel) -> int:
 
 @dataclasses.dataclass
 class Schedule:
+    """The partitioned program: what the lowering turns into kernels.
+
+    Produced by :func:`build_schedule`; carried by every
+    :class:`~repro.core.host.CompiledApp` as ``app.schedule``.  Holds
+    the (post-canonicalization) graph, the stage execution order, the
+    fusion groups with their selected tiles, the memory-bundle map,
+    and the human-readable diagnostics trail of every decision the
+    compiler made on the way here.
+    """
+
     graph: DataflowGraph
     order: list[Stage]
     groups: list[FusionGroup]
@@ -111,6 +126,14 @@ class Schedule:
     diagnostics: list[str] = dataclasses.field(default_factory=list)
 
     def describe(self) -> str:
+        """Render the schedule: kernels, FIFOs, tiles + provenance.
+
+        Each fused kernel line reports its selected tile and *why* it
+        was chosen (``via model`` — analytic sweep, ``via forced`` —
+        explicit ``vector_factor=``, ``via measured`` / ``via cache``
+        / ``via config`` — the autotuner; see ``docs/tuning.md``),
+        followed by the pass-pipeline and ``[tune]`` diagnostics.
+        """
         lines = [f"schedule for {self.graph.name!r}: "
                  f"{len(self.order)} stages -> {len(self.groups)} kernels"]
         for gi, g in enumerate(self.groups):
@@ -122,7 +145,8 @@ class Schedule:
                          f"fifo={[c.name for c in g.internal]}")
             if g.tile is not None:
                 lines.append(f"    tile={g.tile} "
-                             f"vector_factor={g.vector_factor}")
+                             f"vector_factor={g.vector_factor} "
+                             f"via {g.tile_source}")
         lines.append("  bundles: " + ", ".join(
             f"{c.name}->mem{b}" for c, b in self.bundles.items()))
         if self.diagnostics:
@@ -134,7 +158,10 @@ class Schedule:
 def build_schedule(graph: DataflowGraph, n_bundles: int = 4, *,
                    canonicalize: bool = True, strict: bool = False,
                    passes: Sequence[Pass] | PassPipeline | None = None,
-                   spec=None, vector_factor: int | None = None) -> Schedule:
+                   spec=None, vector_factor: int | None = None,
+                   group_vector_factors: Sequence[int | None] | None = None,
+                   max_tile: tuple[int, int] | None = None,
+                   tile_source: str = "measured") -> Schedule:
     """Canonicalize, validate and partition ``graph`` into fusion groups.
 
     ``strict=True`` skips canonicalization and enforces the paper's
@@ -145,6 +172,25 @@ def build_schedule(graph: DataflowGraph, n_bundles: int = 4, *,
     sweeps the factor per group through the DMA cost model
     (:func:`repro.core.vectorize.select_tile`) and logs the choice in
     the schedule diagnostics.
+
+    ``group_vector_factors`` is the autotuner's entry point (see
+    :mod:`repro.tune`): one factor per fusion group in schedule order
+    (``None`` entries for trivial groups), applied with provenance
+    label ``tile_source``; ``max_tile`` caps the tile shape handed to
+    :func:`repro.core.vectorize.choose_tile`.  A length mismatch —
+    e.g. a stale cached config after the partition changed — falls
+    back to the analytic sweep with a diagnostic instead of failing.
+
+    >>> from repro.core.graph import DataflowGraph
+    >>> g = DataflowGraph("doc")
+    >>> x = g.input("img", (64, 256))
+    >>> _ = g.output(g.point(x, lambda v: v + 1.0), "out")
+    >>> sched = build_schedule(g)
+    >>> len(sched.groups), sched.groups[0].tile_source
+    (1, 'model')
+    >>> tuned = build_schedule(g, group_vector_factors=[1])
+    >>> tuned.groups[0].tile[1], tuned.groups[0].tile_source
+    (128, 'measured')
     """
     diagnostics: list[str] = []
     if canonicalize and not strict:
@@ -157,25 +203,60 @@ def build_schedule(graph: DataflowGraph, n_bundles: int = 4, *,
     groups, fusion_diags = _partition_groups(graph, order, spec,
                                              vector_factor)
     diagnostics.extend(fusion_diags)
-    diagnostics.extend(_select_tiles(groups, spec, vector_factor))
+    diagnostics.extend(_select_tiles(groups, spec, vector_factor,
+                                     group_vf=group_vector_factors,
+                                     max_tile=max_tile, source=tile_source))
     bundles = _assign_bundles(graph, n_bundles)
     return Schedule(graph, order, groups, bundles, n_bundles, diagnostics)
 
 
 def _select_tiles(groups: list[FusionGroup], spec,
-                  vector_factor: int | None) -> list[str]:
+                  vector_factor: int | None,
+                  group_vf: Sequence[int | None] | None = None,
+                  max_tile: tuple[int, int] | None = None,
+                  source: str = "measured") -> list[str]:
     """Per-group tile/vector-factor selection (post-partition).
 
-    Forced mode pins every group to one factor; auto mode sweeps per
-    group — different plane widths in one graph can land on different
-    datapath widths.
+    Three modes, in precedence order: ``group_vf`` pins each group
+    individually (the autotuner applying a measured/cached config,
+    labeled ``source``), ``vector_factor`` pins every group to one
+    factor (the paper's explicit knob), and ``None``/``None`` sweeps
+    per group through the cost model — different plane widths in one
+    graph can land on different datapath widths.
     """
-    from repro.core.vectorize import V5E, select_tile
+    from repro.core.vectorize import DEFAULT_MAX_TILE, V5E, select_tile
+    max_tile = tuple(max_tile) if max_tile is not None else DEFAULT_MAX_TILE
     diags: list[str] = []
-    for g in groups:
+    if group_vf is not None and len(group_vf) != len(groups):
+        diags.append(f"[vectorize] tuned config has {len(group_vf)} "
+                     f"group factors but the partition produced "
+                     f"{len(groups)} groups; falling back to the "
+                     f"analytic sweep")
+        group_vf = None
+    for gi, g in enumerate(groups):
         if g.is_trivial:
             continue
-        tile, sweep = select_tile(g, spec or V5E, vector_factor)
+        forced = vector_factor
+        g.tile_source = "forced" if vector_factor is not None else "model"
+        if group_vf is not None and group_vf[gi] is not None:
+            forced = group_vf[gi]
+            g.tile_source = source
+        try:
+            tile, sweep = select_tile(g, spec or V5E, forced, max_tile)
+        except ValueError:
+            # a persistent tuned config can outlive the partitioner or
+            # the spec it was measured under (same group count, changed
+            # plane/budget); an explicit vector_factor= stays a hard
+            # error, but a stale CACHED factor degrades to the sweep
+            if group_vf is None or group_vf[gi] is None:
+                raise
+            names = ",".join(s.name for s in g.stages)
+            diags.append(f"[vectorize] {{{names}}}: tuned "
+                         f"vector_factor={forced} no longer feasible; "
+                         f"falling back to the analytic sweep")
+            g.tile_source = "model"
+            tile, sweep = select_tile(g, spec or V5E, vector_factor,
+                                      max_tile)
         names = ",".join(s.name for s in g.stages)
         if sweep is not None:
             tried = ",".join(
@@ -186,7 +267,7 @@ def _select_tiles(groups: list[FusionGroup], spec,
             diags.append(f"[vectorize] {{{names}}}: swept {tried} -> "
                          f"vector_factor={g.vector_factor} tile={tile}")
         else:
-            diags.append(f"[vectorize] {{{names}}}: forced "
+            diags.append(f"[vectorize] {{{names}}}: {g.tile_source} "
                          f"vector_factor={g.vector_factor} tile={tile}")
     return diags
 

@@ -32,10 +32,16 @@ import numpy as np
 from repro.core.schedule import FusionGroup
 
 __all__ = ["TPUSpec", "choose_tile", "select_tile", "sweep_vector_factor",
-           "modeled_plane_time", "vmem_report"]
+           "modeled_plane_time", "modeled_schedule_time", "scale_spec",
+           "vmem_report", "DEFAULT_MAX_TILE"]
 
 LANE = 128     # VPU/MXU lane width
 SUBLANE = 8    # float32 sublane rows
+
+#: default (th, tw) cap for choose_tile/select_tile; the autotuner
+#: (:mod:`repro.tune`) searches over alternative caps (the tile-height
+#: axis of the schedule space)
+DEFAULT_MAX_TILE = (256, 1024)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,7 +64,7 @@ V5E = TPUSpec()
 
 def choose_tile(group: FusionGroup, spec: TPUSpec = V5E,
                 vector_factor: int = 1,
-                max_tile: tuple[int, int] = (256, 1024)) -> tuple[int, int]:
+                max_tile: tuple[int, int] = DEFAULT_MAX_TILE) -> tuple[int, int]:
     """Pick (th, tw) for a fusion group at a fixed vector factor.
 
     ``tw`` is exactly ``128 * vector_factor`` — the paper's explicit
@@ -132,7 +138,7 @@ def modeled_plane_time(group: FusionGroup, tile: tuple[int, int],
 
 
 def sweep_vector_factor(group: FusionGroup, spec: TPUSpec = V5E,
-                        max_tile: tuple[int, int] = (256, 1024),
+                        max_tile: tuple[int, int] = DEFAULT_MAX_TILE,
                         candidates: tuple[int, ...] | None = None
                         ) -> list[dict]:
     """Cost-model sweep over vector factors; one record per candidate.
@@ -172,7 +178,7 @@ def sweep_vector_factor(group: FusionGroup, spec: TPUSpec = V5E,
 
 def select_tile(group: FusionGroup, spec: TPUSpec = V5E,
                 vector_factor: int | None = None,
-                max_tile: tuple[int, int] = (256, 1024)
+                max_tile: tuple[int, int] = DEFAULT_MAX_TILE
                 ) -> tuple[tuple[int, int], list[dict] | None]:
     """Pick the group's tile; sweep the vector factor when not forced.
 
@@ -196,6 +202,41 @@ def select_tile(group: FusionGroup, spec: TPUSpec = V5E,
     group.tile = best["tile"]
     group.vector_factor = best["vector_factor"]
     return group.tile, records
+
+
+def scale_spec(spec: TPUSpec, vmem_fraction: float) -> TPUSpec:
+    """Shrink a spec's VMEM budget — the *fusion budget* knob.
+
+    The partitioner only merges groups whose double-buffered working
+    set fits ``spec.vmem_bytes``, so scaling the budget changes which
+    stages fuse, not just how they tile.  The autotuner searches over
+    fractions because the model's VMEM budget is a proxy (real kernels
+    pay scratch and compiler overheads the closed form cannot see).
+    """
+    if not 0.0 < vmem_fraction <= 1.0:
+        raise ValueError(f"vmem_fraction must be in (0, 1], got "
+                         f"{vmem_fraction}")
+    if vmem_fraction == 1.0:
+        return spec
+    return dataclasses.replace(spec,
+                               vmem_bytes=int(spec.vmem_bytes * vmem_fraction))
+
+
+def modeled_schedule_time(schedule, spec: TPUSpec = V5E) -> float:
+    """Whole-app modeled seconds: sum of per-group plane times.
+
+    Groups execute back-to-back at app granularity (each drains to HBM
+    before the next starts), so the app-level model is additive over
+    :func:`modeled_plane_time`; trivial (custom/reduce) groups carry no
+    tile and score zero.  This is the ranking prior the autotuner uses
+    to order joint candidates before measuring them.
+    """
+    total = 0.0
+    for g in schedule.groups:
+        if g.is_trivial or g.tile is None:
+            continue
+        total += modeled_plane_time(g, g.tile, spec)
+    return total
 
 
 def vmem_report(group: FusionGroup) -> dict:

@@ -139,6 +139,12 @@ def replicate_app(source: DataflowGraph | CompiledApp,
     Requirements: every channel in the graph is a 2-D plane of one
     shape (the streaming-pipeline apps of Table I) and the plane
     height divides evenly by the replica count.
+
+    ``tune="auto"`` (with optional ``tune_cache=``) tunes the *local
+    extended* plane each replica runs — the schedule is measured (or
+    loaded from the persistent TuningCache) for the shard shape, so a
+    replicated deployment also warm-starts at its measured operating
+    point; the provenance shows up in ``rapp.describe()``.
     """
     if isinstance(source, CompiledApp):
         graph = source.schedule.graph
@@ -178,19 +184,48 @@ def replicate_app(source: DataflowGraph | CompiledApp,
             f"{h_local}-row shard; use fewer replicas")
 
     known = {"canonicalize", "strict", "passes", "spec", "vector_factor",
-             "interpret"}
+             "interpret", "tune", "tune_cache", "max_tile"}
     unknown = set(compile_kwargs) - known
     if unknown:
         raise TypeError(f"replicate_app got unsupported compile kwargs "
                         f"{sorted(unknown)}; supported: {sorted(known)}")
     sched_kwargs = {kw: v for kw, v in compile_kwargs.items()
                     if kw in ("canonicalize", "strict", "passes", "spec",
-                              "vector_factor")}
+                              "vector_factor", "max_tile")}
     lower_kwargs = {kw: v for kw, v in compile_kwargs.items()
                     if kw in ("spec", "vector_factor", "interpret")}
 
     he = h_local + 2 * hy
-    sched = build_schedule(_clone_with_height(graph, he), **sched_kwargs)
+    clone = _clone_with_height(graph, he)
+    tune = compile_kwargs.get("tune")
+    notes: list[str] = []
+    if tune is not None:
+        # tune the *local extended* plane: that is the graph each
+        # replica actually runs, and its TuningCache entry is keyed by
+        # the extended shape — a k-replica deployment warm-starts from
+        # the same persistent cache as its previous runs
+        if compile_kwargs.get("vector_factor") is not None:
+            raise TypeError("tune= and vector_factor= are mutually "
+                            "exclusive in replicate_app")
+        if compile_kwargs.get("max_tile") is not None:
+            raise TypeError("tune= and max_tile= are mutually exclusive "
+                            "in replicate_app: the tile cap is one of "
+                            "the tuner's search axes")
+        from repro.core.vectorize import V5E
+        from repro.tune.search import resolve_tuning, tuned_schedule_kwargs
+        spec = compile_kwargs.get("spec") or V5E
+        tuned = resolve_tuning(
+            clone, backend, tune=tune, spec=spec,
+            cache=compile_kwargs.get("tune_cache"),
+            interpret=compile_kwargs.get("interpret", True),
+            strict=compile_kwargs.get("strict", False),
+            canonicalize=compile_kwargs.get("canonicalize", True),
+            passes=compile_kwargs.get("passes"))
+        if tuned is not None:
+            config, source, notes = tuned
+            sched_kwargs.update(tuned_schedule_kwargs(config, source, spec))
+    sched = build_schedule(clone, **sched_kwargs)
+    sched.diagnostics.extend(notes)
     input_names = [c.name for c in sched.graph.graph_inputs]
     output_names = [c.name for c in sched.graph.graph_outputs]
 

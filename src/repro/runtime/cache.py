@@ -15,6 +15,16 @@ registers the *post-canonicalization* signature as an alias of the
 same entry — resubmitting either form hits.  The pipeline is
 idempotent (property-tested in tests/test_graph.py), so there are at
 most two keys per app.
+
+Tuning integration: compile options are part of the key, and
+``tune="auto"`` is just another option — the first miss runs the
+profile-guided search (or loads the persistent
+:class:`~repro.tune.store.TuningCache`), and every later submit of the
+same topology reuses the *tuned* app, so a serving engine warm-starts
+at the measured operating point.  Option values that carry a
+``to_json`` method (e.g. :class:`~repro.tune.store.ScheduleConfig`)
+are keyed by their JSON form, so two equal configs built by different
+processes still map to one entry.
 """
 from __future__ import annotations
 
@@ -29,6 +39,24 @@ from repro.core.graph import DataflowGraph
 from repro.core.host import CompiledApp
 
 __all__ = ["CacheStats", "CompileCache"]
+
+
+def _opt_repr(v: Any) -> str:
+    """Stable string form of a compile option for cache keying.
+
+    Values exposing ``to_json`` (tuning configs, specs grown later)
+    are keyed structurally so equal-by-value instances from different
+    builders share an entry; everything else falls back to ``repr``.
+    """
+    to_json = getattr(v, "to_json", None)
+    if callable(to_json):
+        try:
+            import json
+            return v.__class__.__name__ + json.dumps(to_json(),
+                                                     sort_keys=True)
+        except (TypeError, ValueError):
+            pass
+    return repr(v)
 
 
 @dataclasses.dataclass
@@ -105,13 +133,13 @@ class CompileCache:
 
     @staticmethod
     def _key(sig: str, backend: str, opts: dict[str, Any]) -> tuple:
-        return (sig, backend, tuple(sorted((k, repr(v))
+        return (sig, backend, tuple(sorted((k, _opt_repr(v))
                                            for k, v in opts.items())))
 
     def get(self, graph: DataflowGraph, backend: str = "pallas",
             **compile_kwargs: Any) -> CompiledApp:
         """Return a compiled app for ``graph``, tracing at most once."""
-        okey = (backend, tuple(sorted((k, repr(v))
+        okey = (backend, tuple(sorted((k, _opt_repr(v))
                                       for k, v in compile_kwargs.items())))
         with self._lock:
             per = self._by_graph.get(graph)

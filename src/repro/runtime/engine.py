@@ -106,7 +106,17 @@ class StreamEngine:
     full pipeline replica on ``max_batch/k`` rows, and the report shows
     measured per-replica throughput next to the model's predicted
     linear scaling.  Extra keyword arguments are forwarded to
-    :func:`repro.core.compiler.compile_graph` on cache misses.
+    :func:`repro.core.compiler.compile_graph` on cache misses —
+    notably ``tune="auto"`` (plus an optional ``tune_cache=``), which
+    makes the engine serve every topology at its *measured* schedule:
+    the first submit of an app either loads the persistent
+    :class:`~repro.tune.store.TuningCache` or runs the profile-guided
+    search once, and all later submits reuse the tuned compiled app
+    through the :class:`~repro.runtime.cache.CompileCache` — serving
+    warm-starts at the tuned operating point with zero per-request
+    measurement.  ``report()`` carries each app's tile provenance
+    (``model`` / ``measured`` / ``cache``) so an operator can tell
+    which regime a serving schedule came from.
     """
 
     def __init__(self, *, backend: str = "pallas", max_queue: int = 64,
@@ -196,6 +206,9 @@ class StreamEngine:
                 key = f"{key}@{sig[:6]}"
             modeled[key] = modeled_latency(app, n, depth=self.max_queue,
                                            replicas=self.replicas)
+            modeled[key]["tile_provenance"] = sorted(
+                {g.tile_source for g in app.schedule.groups
+                 if g.tile is not None})
         return self.telemetry.report(cache=self.cache, modeled=modeled)
 
     # ------------------------------------------------------------------

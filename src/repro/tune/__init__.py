@@ -1,0 +1,27 @@
+"""Profile-guided schedule autotuning with a persistent cache.
+
+The analytic cost model (:mod:`repro.core.vectorize`) *ranks* schedule
+candidates; this package *measures* the short-list on the live backend
+and persists the winner, so ``compile_graph(..., tune="auto")`` pays
+for profiling once per ``(graph, backend, device kind, shapes)`` and
+then always compiles straight to the measured operating point — the
+software analogue of FLOWER shipping a synthesized bitstream.
+
+  store.py  — :class:`ScheduleConfig` (a reapplyable point of the
+              search space) and :class:`TuningCache` (atomic on-disk
+              JSON records keyed by :class:`TuningKey`)
+  search.py — :func:`tune_graph` (model-pruned measured search) and
+              :func:`resolve_tuning` (the ``tune=`` argument protocol)
+
+See ``docs/tuning.md`` for every knob and a worked trace.
+"""
+from repro.tune.search import (Trial, TuningResult, default_measure,
+                               resolve_tuning, tune_graph)
+from repro.tune.store import (ScheduleConfig, TuningCache, TuningKey,
+                              TuningRecord, default_cache_root)
+
+__all__ = [
+    "ScheduleConfig", "TuningCache", "TuningKey", "TuningRecord",
+    "default_cache_root", "Trial", "TuningResult", "default_measure",
+    "resolve_tuning", "tune_graph",
+]

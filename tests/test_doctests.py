@@ -1,0 +1,27 @@
+"""Keep the public-API docstring examples runnable.
+
+CI additionally runs ``pytest --doctest-modules`` on these files; this
+module folds the same examples into the tier-1 suite so a drifting
+docstring fails `python -m pytest -x -q` too, not just the extra step.
+"""
+from __future__ import annotations
+
+import doctest
+
+import pytest
+
+import repro.core.compiler
+import repro.core.schedule
+import repro.tune.search
+import repro.tune.store
+
+_MODULES = [repro.core.compiler, repro.core.schedule,
+            repro.tune.search, repro.tune.store]
+
+
+@pytest.mark.parametrize("module", _MODULES,
+                         ids=[m.__name__ for m in _MODULES])
+def test_docstring_examples(module):
+    result = doctest.testmod(module, verbose=False)
+    assert result.attempted > 0, f"{module.__name__} lost its examples"
+    assert result.failed == 0

@@ -1,0 +1,396 @@
+"""Profile-guided autotuner: store round-trips, deterministic search,
+cache-hit-zero-measurement, and serving/replication integration.
+
+The measured search is exercised with *injected fake measurements*
+(deterministic functions of the candidate config), so these tests
+check search logic and persistence, not wall-clock — except the two
+integration tests at the bottom, which run the real measurer on tiny
+planes with ``backend="xla"``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import DataflowGraph, build_schedule, compile_graph
+from repro.core.apps import build_app
+from repro.tune import (ScheduleConfig, TuningCache, TuningKey, TuningRecord,
+                        tune_graph)
+from repro.tune.search import resolve_tuning
+
+
+def _stencil_graph(h=64, w=512):
+    g = DataflowGraph("tunable")
+    x = g.input("img", (h, w))
+    b = g.stencil(x, (3, 3), lambda p: sum(p[i] for i in range(9)) / 9.0)
+    g.output(g.point2(x, b, lambda a, c: 2.0 * a - c), "out")
+    return g
+
+
+def _prefers_vf(target: int):
+    """Fake measurer: fastest exactly at vector factor ``target``."""
+
+    def measure(cfg: ScheduleConfig) -> float:
+        vf = next(v for v in cfg.group_vf if v is not None)
+        return 1.0 + abs(vf - target) + 0.1 * (cfg.max_tile[0] != 256)
+
+    return measure
+
+
+# ----------------------------------------------------------------------
+# TuningCache store
+# ----------------------------------------------------------------------
+def test_tuning_cache_round_trip(tmp_path):
+    cache = TuningCache(str(tmp_path))
+    key = TuningKey("sigdead", "pallas", "cpu",
+                    (("img", (64, 512), "float32"),))
+    cfg = ScheduleConfig(group_vf=(3, None), max_tile=(128, 1024),
+                         vmem_fraction=0.5)
+    cache.put(key, TuningRecord(config=cfg, source="measured",
+                                best_measured_s=1e-3, n_trials=5))
+    # a FRESH handle re-reads from disk: survives process restarts
+    rec = TuningCache(str(tmp_path)).get(key)
+    assert rec is not None
+    assert rec.config == cfg
+    assert rec.best_measured_s == 1e-3 and rec.n_trials == 5
+    assert rec.created_at > 0
+
+
+def test_tuning_cache_round_trip_identical_schedule(tmp_path):
+    """save -> load -> recompile produces an identical Schedule."""
+    cache = TuningCache(str(tmp_path))
+    g = _stencil_graph()
+    res = tune_graph(g, "xla", cache=cache, measure=_prefers_vf(2))
+    first = compile_graph(_stencil_graph(), "xla", tune="auto",
+                          tune_cache=cache)
+    second = compile_graph(_stencil_graph(), "xla", tune="auto",
+                           tune_cache=cache)
+    tiles = [(gr.tile, gr.vector_factor) for gr in first.schedule.groups]
+    assert tiles == [(gr.tile, gr.vector_factor)
+                     for gr in second.schedule.groups]
+    assert [v for v in res.config.group_vf if v is not None] == [2]
+    assert all(gr.tile_source == "cache" for gr in second.schedule.groups
+               if gr.tile is not None)
+
+
+def test_tuning_cache_miss_on_different_key(tmp_path):
+    cache = TuningCache(str(tmp_path))
+    key = TuningKey("sig1", "pallas", "cpu", ())
+    cache.put(key, TuningRecord(config=ScheduleConfig(group_vf=(1,))))
+    assert cache.get(dataclasses.replace(key, backend="xla")) is None
+    assert cache.get(dataclasses.replace(key, device_kind="TPU v5e")) is None
+    assert cache.get(key) is not None
+
+
+def test_tuning_cache_rejects_foreign_versions(tmp_path):
+    cache = TuningCache(str(tmp_path))
+    key = TuningKey("sigv", "pallas", "cpu", ())
+    rec = TuningRecord(config=ScheduleConfig(group_vf=(1,)), version=999)
+    cache.put(key, rec)
+    assert TuningCache(str(tmp_path)).get(key) is None
+
+
+def test_signature_stable_across_code_object_identity():
+    """The persistent cache key must not depend on memory addresses.
+
+    A restarted process rebuilds the same program with NEW code
+    objects (new ``id()``s); the graph signature — and hence the
+    TuningKey — must be identical anyway, including for stage fns
+    with *nested* code objects (genexprs), whose default repr embeds
+    an ``at 0x…`` address.
+    """
+    src = "lambda p: sum(p[i] for i in range(9)) / 9.0"
+
+    def build():
+        fn = eval(compile(src, "<probe>", "eval"))   # fresh code object
+        g = DataflowGraph("sig")
+        x = g.input("img", (32, 128))
+        g.output(g.stencil(x, (3, 3), fn), "out")
+        return g
+
+    g1, g2 = build(), build()
+    assert g1.stages[0].fn.__code__ is not g2.stages[0].fn.__code__
+    assert g1.signature() == g2.signature()
+    assert TuningKey.for_graph(g1, "pallas", "cpu") == \
+        TuningKey.for_graph(g2, "pallas", "cpu")
+
+
+# ----------------------------------------------------------------------
+# the measured search
+# ----------------------------------------------------------------------
+def test_deterministic_winner_under_fake_measurements(tmp_path):
+    """Same fake measurements -> same winner, twice over."""
+    r1 = tune_graph(_stencil_graph(), "xla",
+                    cache=TuningCache(str(tmp_path / "a")),
+                    measure=_prefers_vf(2))
+    r2 = tune_graph(_stencil_graph(), "xla",
+                    cache=TuningCache(str(tmp_path / "b")),
+                    measure=_prefers_vf(2))
+    assert r1.source == r2.source == "measured"
+    assert r1.config == r2.config
+    assert 2 in r1.config.group_vf
+
+
+def test_winner_never_slower_than_analytic_pick(tmp_path):
+    """The analytic pick is always measured, so it bounds the winner."""
+    for target in (1, 2, 3, 4):
+        res = tune_graph(_stencil_graph(), "xla",
+                         cache=TuningCache(str(tmp_path / str(target))),
+                         measure=_prefers_vf(target))
+        assert res.record.best_measured_s <= res.record.analytic_measured_s
+
+
+def test_cache_hit_means_zero_measurements(tmp_path):
+    """The regression the persistent cache exists for."""
+    cache = TuningCache(str(tmp_path))
+    calls = {"n": 0}
+
+    def counting(cfg: ScheduleConfig) -> float:
+        calls["n"] += 1
+        return _prefers_vf(2)(cfg)
+
+    first = tune_graph(_stencil_graph(), "xla", cache=cache,
+                       measure=counting)
+    assert first.source == "measured"
+    assert calls["n"] == first.n_measurements > 0
+
+    before = calls["n"]
+    again = tune_graph(_stencil_graph(), "xla", cache=cache,
+                       measure=counting)
+    assert again.source == "cache"
+    assert again.n_measurements == 0
+    assert calls["n"] == before            # not a single new measurement
+    assert again.config == first.config
+
+
+def test_cache_hit_after_canonicalization_alias(tmp_path):
+    """A graph canonicalized in place still hits its own record."""
+    cache = TuningCache(str(tmp_path))
+    g = _stencil_graph()                    # non-canonical (multi-reader)
+    tune_graph(g, "xla", cache=cache, measure=_prefers_vf(2))
+    # g was canonicalized in place during the search; its signature
+    # changed, but the post-canonicalization alias must hit
+    res = tune_graph(g, "xla", cache=cache, measure=_prefers_vf(2))
+    assert res.source == "cache" and res.n_measurements == 0
+
+
+def test_max_trials_caps_measurements(tmp_path):
+    counting = {"n": 0}
+
+    def measure(cfg):
+        counting["n"] += 1
+        return 1.0
+
+    tune_graph(_stencil_graph(), "xla", cache=TuningCache(str(tmp_path)),
+               measure=measure, max_trials=2)
+    assert counting["n"] == 2
+
+
+def test_resolve_tuning_protocol(tmp_path):
+    g = _stencil_graph()
+    assert resolve_tuning(g, "xla", tune=None) is None
+    assert resolve_tuning(g, "xla", tune="model") is None
+    cfg = ScheduleConfig(group_vf=(1,))
+    out = resolve_tuning(g, "xla", tune=cfg)
+    assert out is not None and out[0] is cfg and out[1] == "config"
+    with pytest.raises(ValueError, match="tune must be"):
+        resolve_tuning(g, "xla", tune="bogus")
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        compile_graph(g, "xla", tune="auto", vector_factor=2)
+
+
+def test_interpret_and_compiled_modes_tune_separately(tmp_path):
+    """Interpreter-mode timings must never serve compiled-mode runs."""
+    cache = TuningCache(str(tmp_path))
+    r_interp = tune_graph(_stencil_graph(), "xla", cache=cache,
+                          measure=_prefers_vf(2), interpret=True)
+    r_comp = tune_graph(_stencil_graph(), "xla", cache=cache,
+                        measure=_prefers_vf(2), interpret=False)
+    assert r_interp.source == "measured"
+    assert r_comp.source == "measured"      # NOT a hit on the interp entry
+    assert r_interp.key.mode == "interpret"
+    assert r_comp.key.mode == "compiled"
+    # but each mode hits its own entry
+    assert tune_graph(_stencil_graph(), "xla", cache=cache,
+                      interpret=False).source == "cache"
+
+
+def test_tune_rejects_max_tile_override():
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        compile_graph(_stencil_graph(), "xla", tune="auto",
+                      max_tile=(64, 256))
+    from repro.parallel.replicate import replicate_app
+    with pytest.raises(TypeError, match="mutually exclusive"):
+        replicate_app(compile_graph(_stencil_graph(32, 128), "xla"),
+                      tune="auto", max_tile=(64, 128))
+
+
+def test_tune_model_is_the_analytic_default():
+    """tune="model" names the no-tuning regime; it composes with the
+    explicit knobs instead of tripping the mutual-exclusion guards."""
+    app = compile_graph(_stencil_graph(), "xla", tune="model",
+                        vector_factor=2)
+    assert all(g.vector_factor == 2 for g in app.schedule.groups
+               if g.tile is not None)
+    assert "via forced" in app.schedule.describe()
+
+
+def test_tuning_key_separates_spec_and_strictness(tmp_path):
+    """Configs measured under one spec/compile regime must not serve
+    another: the context digest keeps the cache entries apart."""
+    import dataclasses as dc
+
+    from repro.core import V5E
+
+    cache = TuningCache(str(tmp_path))
+    r1 = tune_graph(_stencil_graph(), "xla", cache=cache,
+                    measure=_prefers_vf(2))
+    small = dc.replace(V5E, vmem_bytes=V5E.vmem_bytes // 2)
+    r2 = tune_graph(_stencil_graph(), "xla", cache=cache, spec=small,
+                    measure=_prefers_vf(2))
+    assert r2.source == "measured"         # NOT served from r1's entry
+    assert r1.key.context != r2.key.context
+    # each regime then hits its own entry
+    assert tune_graph(_stencil_graph(), "xla", cache=cache,
+                      spec=small).source == "cache"
+
+
+def test_entries_deduplicates_canonicalization_aliases(tmp_path):
+    """One tuned app == one record, even when stored under both the
+    pre- and post-canonicalization signatures."""
+    cache = TuningCache(str(tmp_path))
+    tune_graph(_stencil_graph(), "xla", cache=cache,
+               measure=_prefers_vf(2))     # non-canonical: writes an alias
+    import os
+    files = [n for n in os.listdir(str(tmp_path)) if n.endswith(".json")]
+    assert len(files) == 2                 # pre + post forms on disk
+    assert len(cache) == 1                 # but ONE tuning result
+
+
+def test_stale_config_infeasible_factor_falls_back():
+    """A cached factor the plane can no longer hold degrades gracefully."""
+    sched = build_schedule(_stencil_graph(64, 256),   # cap is vf=2
+                           group_vector_factors=[10])
+    assert any("no longer feasible" in d for d in sched.diagnostics)
+    g0 = sched.groups[0]
+    assert g0.tile is not None and g0.tile_source == "model"
+    # an EXPLICIT infeasible vector_factor= stays a hard error
+    with pytest.raises(ValueError, match="vector_factor=10"):
+        build_schedule(_stencil_graph(64, 256), vector_factor=10)
+
+
+def test_stale_config_length_mismatch_falls_back():
+    """A config sized for a different partition degrades gracefully."""
+    sched = build_schedule(_stencil_graph(),
+                           group_vector_factors=[1, 1, 1, 1, 1])
+    assert any("falling back to the analytic sweep" in d
+               for d in sched.diagnostics)
+    g0 = sched.groups[0]
+    assert g0.tile is not None and g0.tile_source == "model"
+
+
+def test_describe_provenance_lines(tmp_path):
+    cache = TuningCache(str(tmp_path))
+    g = _stencil_graph()
+    tune_graph(g, "xla", cache=cache, measure=_prefers_vf(1))
+    fresh = compile_graph(_stencil_graph(), "xla", tune="auto",
+                          tune_cache=cache)
+    text = fresh.schedule.describe()
+    assert "via cache" in text and "[tune] source=cache" in text
+    default = compile_graph(_stencil_graph(), "xla")
+    assert "via model" in default.schedule.describe()
+    forced = compile_graph(_stencil_graph(), "xla", vector_factor=2)
+    assert "via forced" in forced.schedule.describe()
+
+
+# ----------------------------------------------------------------------
+# integration: real measurements on tiny planes
+# ----------------------------------------------------------------------
+def test_tuned_app_is_bit_exact_and_correct(tmp_path):
+    cache = TuningCache(str(tmp_path))
+    g = build_app("gaussian_blur", 32, 256)
+    app = compile_graph(g, "xla", tune="auto", tune_cache=cache)
+    plain = compile_graph(build_app("gaussian_blur", 32, 256), "xla")
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(32, 256)).astype(np.float32)
+    # tuning picks tiles, never semantics: bit-exact vs the untuned app
+    np.testing.assert_array_equal(np.asarray(app(img=x)["out"]),
+                                  np.asarray(plain(img=x)["out"]))
+    ref = build_app("gaussian_blur", 32, 256).reference_eval({"img": x})
+    np.testing.assert_allclose(np.asarray(app(img=x)["out"]),
+                               np.asarray(ref["out"]), rtol=1e-5, atol=1e-6)
+    assert all(gr.tile_source in ("measured", "cache")
+               for gr in app.schedule.groups if gr.tile is not None)
+
+
+def test_engine_serves_tuned_schedules_through_compile_cache(tmp_path):
+    """StreamEngine(tune="auto") warm-starts at the tuned point."""
+    from repro.runtime import StreamEngine
+
+    cache = TuningCache(str(tmp_path))
+    g = _stencil_graph(32, 256)
+    res = tune_graph(g, "xla", cache=cache, measure=_prefers_vf(2))
+
+    calls = {"n": 0}
+    import repro.tune.search as search
+
+    real = search.default_measure
+
+    def counting(*a, **kw):
+        calls["n"] += 1
+        return real(*a, **kw)
+
+    search.default_measure = counting
+    try:
+        rng = np.random.default_rng(1)
+        frames = [rng.normal(size=(32, 256)).astype(np.float32)
+                  for _ in range(6)]
+        with StreamEngine(backend="xla", max_batch=4, tune="auto",
+                          tune_cache=cache) as eng:
+            handles = [eng.submit(_stencil_graph(32, 256), {"img": f})
+                       for f in frames]
+            outs = [h.result() for h in handles]
+            rep = eng.report()
+    finally:
+        search.default_measure = real
+    assert calls["n"] == 0                 # zero measurements: cache-served
+    plain = compile_graph(_stencil_graph(32, 256), "xla")
+    np.testing.assert_allclose(outs[0]["out"],
+                               np.asarray(plain(img=frames[0])["out"]),
+                               rtol=1e-6, atol=1e-7)
+    prov = [m["tile_provenance"] for m in rep["modeled"].values()]
+    assert prov and all(p == ["cache"] for p in prov)
+    assert 2 in res.config.group_vf
+
+
+def test_replicate_app_picks_up_tuning(tmp_path):
+    from repro.parallel.replicate import replicate_app
+
+    cache = TuningCache(str(tmp_path))
+    g = build_app("filter_chain", 32, 128)
+    app = compile_graph(build_app("filter_chain", 32, 128), backend="xla")
+    rapp = replicate_app(app, tune="auto", tune_cache=cache)
+    x = np.random.default_rng(0).normal(size=(32, 128)).astype(np.float32)
+    np.testing.assert_array_equal(np.asarray(rapp(img=x)["out"]),
+                                  np.asarray(app(img=x)["out"]))
+    assert len(cache) >= 1                 # the local extended plane's entry
+    assert "via measured" in rapp.describe() or \
+        "via cache" in rapp.describe()
+    # second replication: served from the persistent cache
+    calls = {"n": 0}
+    import repro.tune.search as search
+    real = search.default_measure
+
+    def counting(*a, **kw):
+        calls["n"] += 1
+        return real(*a, **kw)
+
+    search.default_measure = counting
+    try:
+        rapp2 = replicate_app(app, tune="auto", tune_cache=cache)
+    finally:
+        search.default_measure = real
+    assert calls["n"] == 0
+    assert "via cache" in rapp2.describe()
