@@ -1,10 +1,14 @@
 """Lucas-Kanade optical flow — the paper's Fig. 4 16-stage pipeline.
 
-Builds the full LK dataflow graph (derivatives, products, windowed
-sums, 2x2 solve), canonicalizes + convex-fuses it into one streaming
-kernel through `repro.core.compiler.compile_graph`, and estimates
-motion on a synthetic translating pattern.  Demonstrates memory-bundle
-assignment across the parallel DAG paths (the paper's mem1..4).
+The LK graph (derivatives, products, windowed sums, 2x2 solve) is now
+a *traced single-source program*: `repro.core.apps.optical_flow_lk`
+is plain array code (`it = f2 - f1`, `ixx = ix * ix`, `fe.conv`, …)
+that the frontend extracts into the dataflow graph — every split
+stage below was inserted automatically.  The pass pipeline
+canonicalizes it, convex DAG fusion collapses all 16 stages into one
+streaming kernel, and the example estimates motion on a synthetic
+translating pattern.  Demonstrates memory-bundle assignment across
+the parallel DAG paths (the paper's mem1..4).
 
 Run:  PYTHONPATH=src python examples/optical_flow.py
 """
@@ -19,13 +23,13 @@ from repro.core.apps import optical_flow_lk
 
 def main():
     H, W = 256, 512
-    g = optical_flow_lk(H, W)
+    g = optical_flow_lk(H, W)          # traced from plain array code
     sched = build_schedule(g)
     n_split = sum(1 for s in sched.graph.stages if s.kind == "split")
     print(f"LK graph: {len(sched.graph.stages)} tasks "
           f"({len(sched.graph.stages) - n_split} compute + {n_split} "
-          f"splits), fused into {len(sched.groups)} kernel(s) by convex "
-          f"DAG fusion")
+          f"auto-inserted splits), fused into {len(sched.groups)} "
+          f"kernel(s) by convex DAG fusion")
     print("memory bundles:",
           {c.name: f"mem{b}" for c, b in sched.bundles.items()})
 

@@ -1,13 +1,13 @@
-"""Quickstart: the paper's running example (Section IV).
+"""Quickstart: the paper's running example (Section IV), single-source.
 
-A single-source program: apply fun1 and fun2 to one image and combine
-with fun3.  Note there is NO explicit split below — ``in_img`` is
-simply read twice, which the seed compiler rejected.  The pass-based
-pipeline (`repro.core.compiler.compile_graph`) canonicalizes it
-automatically (AutoSplitInsertion), fuses all tasks into ONE streaming
-kernel by convex DAG fusion (depth-2 FIFOs == double-buffered VMEM
-tiles), assigns memory bundles, and generates the host launcher —
-exactly the paper's workflow, on TPU abstractions.
+The program below is plain array code: operators for point math,
+``fe.conv`` for the local operator.  There is NO DataflowGraph, no
+channel, no split anywhere — tracing extracts the graph (``in_img``
+is simply read twice; AutoSplitInsertion makes the fan-out explicit),
+the pass pipeline canonicalizes it, convex DAG fusion collapses all
+tasks into ONE streaming kernel (depth-2 FIFOs == double-buffered
+VMEM tiles), and host codegen produces the launcher — the paper's
+whole workflow from one decorated function.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -16,30 +16,30 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
-from repro.core import DataflowGraph, compile_graph
+import repro.frontend as fe
+
+
+@fe.dataflow_fn(backend="pallas")
+def quickstart(in_img):
+    fun1 = 2.0 * in_img + 1.0                       # point task
+    fun2 = fe.conv(in_img, np.ones((5, 5), np.float32) / 25.0)  # local task
+    return {"out_img": fun1 - fun2}                 # point task + write
 
 
 def main():
     H, W = 512, 1024
-    g = DataflowGraph("quickstart")
-
-    in_img = g.input("in_img", (H, W))                    # read_image
-    t1 = g.point(in_img, lambda x: x * 2.0 + 1.0, name="fun1")
-    t2 = g.stencil(in_img, (5, 5),                        # 2nd read of in_img!
-                   lambda p: sum(p[i] for i in range(25)) / 25.0,
-                   name="fun2")
-    out = g.point2(t1, t2, lambda a, b: a - b, name="fun3")
-    g.output(out, "out_img")                              # image_write
+    x = np.random.default_rng(0).normal(size=(H, W)).astype(np.float32)
 
     # --- the compiler pipeline ---------------------------------------
-    # validate -> canonicalize (auto-split, DCE, point fusion)
-    #          -> convex DAG fusion -> lower -> host codegen
-    app = compile_graph(g, backend="pallas")              # fused kernel
-    print(app.schedule.describe(), "\n")                  # incl. pass log
-    print(app.host_program(), "\n")                      # generated host
+    # trace -> canonicalize (auto-split, DCE, point fusion)
+    #       -> convex DAG fusion -> lower -> host codegen
+    app = quickstart.compile(x)                     # fused pallas kernel
+    print("frontend log:", *app.graph.frontend_log, sep="\n  ")
+    print()
+    print(app.schedule.describe(), "\n")            # incl. pass log
+    print(app.host_program(), "\n")                # generated host
 
-    x = np.random.default_rng(0).normal(size=(H, W)).astype(np.float32)
-    out = app(in_img=x)["out_img"]
+    out = quickstart(x)["out_img"]                  # trace+compile memoized
     ref = app.schedule.graph.reference_eval({"in_img": x})["out_img"]
     err = float(np.abs(np.asarray(out) - np.asarray(ref)).max())
     print(f"fused-vs-reference max |err| = {err:.2e}")

@@ -1,10 +1,21 @@
-"""The paper's benchmark applications (Table I), in the stage DSL.
+"""The paper's benchmark applications (Table I), as single-source
+traced programs.
 
-Each builder returns a :class:`DataflowGraph` for one application, on
-single-channel float32 planes (RGB apps take three planes).  Stage
-counts match Table I's "compute" stages; the scheduler adds the
-read/write staging implicitly (the paper: "+2 memory stages for burst
-transfers").
+Each builder is now exactly what the paper promises: a plain Python
+array function — operators for point math, :func:`fe.conv` /
+:func:`fe.window` for local operators, shared formulas from
+:mod:`repro.frontend.lib` — handed to :func:`fe.trace`, which
+extracts, canonicalizes and validates the dataflow graph.  No
+channels, no ``split`` stages, no reader/writer bookkeeping anywhere
+below.
+
+The hand-assembled stage-DSL graphs live on in
+:mod:`repro.core.handbuilt` as the equivalence oracle (lightly
+adapted: stage bodies now come from the shared library — see that
+module's docstring): for every app the traced graph's canonical
+:meth:`DataflowGraph.signature` equals the hand-built one's, and
+outputs agree bit-exactly on every backend
+(``tests/test_frontend.py``).
 
 These graphs are consumed by examples/, benchmarks/fig5_app_latency.py,
 benchmarks/fig6_opt_ladder.py and the test-suite — one source program
@@ -14,246 +25,154 @@ from __future__ import annotations
 
 from typing import Callable
 
-import jax.numpy as jnp
-import numpy as np
-
+import repro.frontend as fe
 from repro.core.graph import DataflowGraph
+from repro.core.handbuilt import HAND_BUILT
+from repro.frontend import lib
+from repro.frontend.lib import (GAUSS3, GAUSS5, JACOBI3, LAPLACE3, MEAN5,
+                                SOBEL_X, SOBEL_Y, bilateral, conv_taps,
+                                sobel_mag)
 
-__all__ = ["APPS", "build_app", "compile_app"]
+__all__ = ["APPS", "HAND_BUILT", "build_app", "compile_app"]
 
-
-# ----------------------------------------------------------------------
-# small stencil helpers (patches: (kh*kw, th, tw), row-major taps)
-# ----------------------------------------------------------------------
-def _conv(weights: np.ndarray) -> Callable:
-    # Taps are unrolled as scalar multiplies (zeros elided) — the same
-    # constant folding an FPGA synthesizer applies to fixed
-    # coefficients, and it keeps stage fns free of captured array
-    # constants (a Pallas kernel requirement).
-    taps = [float(v) for v in weights.reshape(-1)]
-
-    def fn(p):
-        acc = None
-        for i, t in enumerate(taps):
-            if t == 0.0:
-                continue
-            term = p[i] if t == 1.0 else p[i] * t
-            acc = term if acc is None else acc + term
-        return acc
-
-    return fn
-
-
-GAUSS3 = np.array([[1, 2, 1], [2, 4, 2], [1, 2, 1]], np.float32) / 16.0
-GAUSS5 = np.outer([1, 4, 6, 4, 1], [1, 4, 6, 4, 1]).astype(np.float32) / 256.0
-MEAN5 = np.ones((5, 5), np.float32) / 25.0
-SOBEL_X = np.array([[-1, 0, 1], [-2, 0, 2], [-1, 0, 1]], np.float32)
-SOBEL_Y = SOBEL_X.T.copy()
-LAPLACE3 = np.array([[0, 1, 0], [1, -4, 1], [0, 1, 0]], np.float32)
-JACOBI3 = np.array([[0, 1, 0], [1, 0, 1], [0, 1, 0]], np.float32) / 4.0
-
-
-def _sobel_mag(p):
-    gx = _conv(SOBEL_X)(p)
-    gy = _conv(SOBEL_Y)(p)
-    return jnp.sqrt(gx * gx + gy * gy + 1e-12)
-
-
-def _bilateral(sigma_s: float = 2.0, sigma_r: float = 0.25) -> Callable:
-    kh = kw = 5
-    ds = np.array([[(i - 2) ** 2 + (j - 2) ** 2 for j in range(kw)]
-                   for i in range(kh)], np.float32).reshape(-1)
-    ws = [float(v) for v in np.exp(-ds / (2 * sigma_s ** 2))]
-    inv2r = 1.0 / (2 * sigma_r ** 2)
-
-    def fn(p):
-        center = p[kh * kw // 2]
-        sum_w = None
-        sum_wp = None
-        for i, wsi in enumerate(ws):  # unrolled taps (scalar consts)
-            wr = jnp.exp(-(p[i] - center) ** 2 * inv2r) * wsi
-            sum_w = wr if sum_w is None else sum_w + wr
-            term = wr * p[i]
-            sum_wp = term if sum_wp is None else sum_wp + term
-        return sum_wp / (sum_w + 1e-12)
-
-    return fn
+# back-compat aliases: these helpers lived here before they were
+# hoisted into the shared kernel library (repro.frontend.lib)
+_conv = conv_taps
+_sobel_mag = sobel_mag
+_bilateral = bilateral
 
 
 # ----------------------------------------------------------------------
-# application builders
+# application builders (traced single-source programs)
 # ----------------------------------------------------------------------
 def mean_filter(h: int, w: int) -> DataflowGraph:
-    g = DataflowGraph("mean_filter")
-    x = g.input("img", (h, w))
-    g.output(g.stencil(x, (5, 5), _conv(MEAN5), name="mean5"), "out")
-    return g
+    def mean_filter_src(img):
+        return fe.conv(img, MEAN5)
+
+    return fe.trace(mean_filter_src, (h, w), name="mean_filter")
 
 
 def gaussian_blur(h: int, w: int) -> DataflowGraph:
-    g = DataflowGraph("gaussian_blur")
-    x = g.input("img", (h, w))
-    g.output(g.stencil(x, (5, 5), _conv(GAUSS5), name="gauss5"), "out")
-    return g
+    def gaussian_blur_src(img):
+        return fe.conv(img, GAUSS5)
+
+    return fe.trace(gaussian_blur_src, (h, w), name="gaussian_blur")
 
 
 def bilateral_filter(h: int, w: int) -> DataflowGraph:
-    g = DataflowGraph("bilateral_filter")
-    x = g.input("img", (h, w))
-    g.output(g.stencil(x, (5, 5), _bilateral(), name="bilateral5",
-                       ii=4.0, fill=64.0), "out")
-    return g
+    def bilateral_src(img):
+        return fe.window(img, (5, 5), lib.bilateral(), ii=4.0, fill=64.0)
+
+    return fe.trace(bilateral_src, (h, w), name="bilateral_filter")
 
 
 def sobel_luma(h: int, w: int) -> DataflowGraph:
-    g = DataflowGraph("sobel_luma")
-    r = g.input("r", (h, w))
-    gr = g.input("g", (h, w))
-    b = g.input("b", (h, w))
-    luma = g.pointn([r, gr, b],
-                    lambda r, gc, b: 0.299 * r + 0.587 * gc + 0.114 * b,
-                    name="luma")
-    g.output(g.stencil(luma, (3, 3), _sobel_mag, name="sobel"), "out")
-    return g
+    def sobel_luma_src(r, g, b):
+        luma = lib.luma_rec601(r, g, b)
+        return fe.window(luma, (3, 3), lib.sobel_mag)
+
+    return fe.trace(sobel_luma_src, (h, w), (h, w), (h, w),
+                    name="sobel_luma")
 
 
 def unsharp_mask(h: int, w: int, amount: float = 1.5) -> DataflowGraph:
-    g = DataflowGraph("unsharp_mask")
-    x = g.input("img", (h, w))
-    x1, x2, x3 = g.split(x, 3)
-    blur = g.stencil(x1, (5, 5), _conv(GAUSS5), name="blur")
-    diff = g.point2(x2, blur, lambda a, b: a - b, name="highpass")
-    g.output(g.point2(x3, diff, lambda a, d: a + amount * d, name="sharpen"),
-             "out")
-    return g
+    def unsharp_src(img):
+        blur = fe.conv(img, GAUSS5)
+        return img + amount * (img - blur)
+
+    return fe.trace(unsharp_src, (h, w), name="unsharp_mask")
 
 
 def filter_chain(h: int, w: int) -> DataflowGraph:
-    g = DataflowGraph("filter_chain")
-    x = g.input("img", (h, w))
-    c = x
-    for i in range(3):
-        c = g.stencil(c, (3, 3), _conv(GAUSS3), name=f"filt{i + 1}")
-    g.output(c, "out")
-    return g
+    def filter_chain_src(img):
+        c = img
+        for _ in range(3):
+            c = fe.conv(c, GAUSS3)
+        return c
+
+    return fe.trace(filter_chain_src, (h, w), name="filter_chain")
 
 
 def jacobi(h: int, w: int) -> DataflowGraph:
-    g = DataflowGraph("jacobi")
-    x = g.input("img", (h, w))
-    g.output(g.stencil(x, (3, 3), _conv(JACOBI3), name="jacobi3"), "out")
-    return g
+    def jacobi_src(img):
+        return fe.conv(img, JACOBI3)
+
+    return fe.trace(jacobi_src, (h, w), name="jacobi")
 
 
 def laplace(h: int, w: int) -> DataflowGraph:
-    g = DataflowGraph("laplace")
-    x = g.input("img", (h, w))
-    g.output(g.stencil(x, (3, 3), _conv(LAPLACE3), name="laplace3"), "out")
-    return g
+    def laplace_src(img):
+        return fe.conv(img, LAPLACE3)
+
+    return fe.trace(laplace_src, (h, w), name="laplace")
 
 
 def square(h: int, w: int) -> DataflowGraph:
-    g = DataflowGraph("square")
-    x = g.input("img", (h, w))
-    g.output(g.point(x, lambda v: v * v, name="square"), "out")
-    return g
+    def square_src(img):
+        return img * img
+
+    return fe.trace(square_src, (h, w), name="square")
 
 
 def sobel(h: int, w: int) -> DataflowGraph:
-    g = DataflowGraph("sobel")
-    x = g.input("img", (h, w))
-    g.output(g.stencil(x, (3, 3), _sobel_mag, name="sobel3"), "out")
-    return g
+    def sobel_src(img):
+        return fe.window(img, (3, 3), lib.sobel_mag)
+
+    return fe.trace(sobel_src, (h, w), name="sobel")
 
 
 def harris(h: int, w: int, k: float = 0.04) -> DataflowGraph:
-    g = DataflowGraph("harris")
-    x = g.input("img", (h, w))
-    x1, x2 = g.split(x, 2)
-    ix = g.stencil(x1, (3, 3), _conv(SOBEL_X), name="Ix")
-    iy = g.stencil(x2, (3, 3), _conv(SOBEL_Y), name="Iy")
-    ixa, ixb = g.split(ix, 2, name="splitIx")
-    iya, iyb = g.split(iy, 2, name="splitIy")
-    ixx = g.point(ixa, lambda a: a * a, name="Ixx")
-    iyy = g.point(iya, lambda a: a * a, name="Iyy")
-    ixy = g.point2(ixb, iyb, lambda a, b: a * b, name="Ixy")
-    wxx = g.stencil(ixx, (5, 5), _conv(GAUSS5), name="WIxx")
-    wyy = g.stencil(iyy, (5, 5), _conv(GAUSS5), name="WIyy")
-    wxy = g.stencil(ixy, (5, 5), _conv(GAUSS5), name="WIxy")
-    resp = g.pointn(
-        [wxx, wyy, wxy],
-        lambda a, c, b: (a * c - b * b) - k * (a + c) * (a + c),
-        name="response")
-    g.output(resp, "out")
-    return g
+    def harris_src(img):
+        ix = fe.conv(img, SOBEL_X)
+        iy = fe.conv(img, SOBEL_Y)
+        ixx = ix * ix
+        iyy = iy * iy
+        ixy = ix * iy
+        wxx = fe.conv(ixx, GAUSS5)
+        wyy = fe.conv(iyy, GAUSS5)
+        wxy = fe.conv(ixy, GAUSS5)
+        return lib.harris_response(k)(wxx, wyy, wxy)
+
+    return fe.trace(harris_src, (h, w), name="harris")
 
 
 def shi_tomasi(h: int, w: int) -> DataflowGraph:
-    g = DataflowGraph("shi_tomasi")
-    x = g.input("img", (h, w))
-    x1, x2 = g.split(x, 2)
-    ix = g.stencil(x1, (3, 3), _conv(SOBEL_X), name="Ix")
-    iy = g.stencil(x2, (3, 3), _conv(SOBEL_Y), name="Iy")
-    ixa, ixb = g.split(ix, 2, name="splitIx")
-    iya, iyb = g.split(iy, 2, name="splitIy")
-    ixx = g.point(ixa, lambda a: a * a, name="Ixx")
-    iyy = g.point(iya, lambda a: a * a, name="Iyy")
-    ixy = g.point2(ixb, iyb, lambda a, b: a * b, name="Ixy")
-    wxx = g.stencil(ixx, (5, 5), _conv(GAUSS5), name="WIxx")
-    wyy = g.stencil(iyy, (5, 5), _conv(GAUSS5), name="WIyy")
-    wxy = g.stencil(ixy, (5, 5), _conv(GAUSS5), name="WIxy")
+    def shi_tomasi_src(img):
+        ix = fe.conv(img, SOBEL_X)
+        iy = fe.conv(img, SOBEL_Y)
+        ixx = ix * ix
+        iyy = iy * iy
+        ixy = ix * iy
+        wxx = fe.conv(ixx, GAUSS5)
+        wyy = fe.conv(iyy, GAUSS5)
+        wxy = fe.conv(ixy, GAUSS5)
+        return lib.lam_min(wxx, wyy, wxy)
 
-    def lam_min(a, c, b):
-        tr2 = (a + c) * 0.5
-        det = a * c - b * b
-        return tr2 - jnp.sqrt(jnp.maximum(tr2 * tr2 - det, 0.0) + 1e-12)
-
-    g.output(g.pointn([wxx, wyy, wxy], lam_min, name="score"), "out")
-    return g
+    return fe.trace(shi_tomasi_src, (h, w), name="shi_tomasi")
 
 
 def optical_flow_lk(h: int, w: int, eps: float = 1e-3) -> DataflowGraph:
     """Lucas-Kanade optical flow (paper Fig. 4): 16 compute stages."""
-    g = DataflowGraph("optical_flow_lk")
-    f1 = g.input("f1", (h, w))
-    f2 = g.input("f2", (h, w))
-    f1a, f1b, f1c = g.split(f1, 3, name="split_f1")
-    # normalized derivative taps (sobel/8 ~= centered difference)
-    ix = g.stencil(f1a, (3, 3), _conv(SOBEL_X / 8.0), name="Ix")    # 1
-    iy = g.stencil(f1b, (3, 3), _conv(SOBEL_Y / 8.0), name="Iy")    # 2
-    it = g.point2(f2, f1c, lambda b, a: b - a, name="It")           # 3
-    ix1, ix2, ix3 = g.split(ix, 3, name="split_Ix")
-    iy1, iy2, iy3 = g.split(iy, 3, name="split_Iy")
-    it1, it2 = g.split(it, 2, name="split_It")
-    ixx = g.point(ix1, lambda a: a * a, name="IxIx")                # 4
-    iyy = g.point(iy1, lambda a: a * a, name="IyIy")                # 5
-    ixy = g.point2(ix2, iy2, lambda a, b: a * b, name="IxIy")       # 6
-    ixt = g.point2(ix3, it1, lambda a, b: a * b, name="IxIt")       # 7
-    iyt = g.point2(iy3, it2, lambda a, b: a * b, name="IyIt")       # 8
-    wxx = g.stencil(ixx, (5, 5), _conv(GAUSS5), name="WIxx")        # 9
-    wyy = g.stencil(iyy, (5, 5), _conv(GAUSS5), name="WIyy")        # 10
-    wxy = g.stencil(ixy, (5, 5), _conv(GAUSS5), name="WIxy")        # 11
-    wxt = g.stencil(ixt, (5, 5), _conv(GAUSS5), name="WIxt")        # 12
-    wyt = g.stencil(iyt, (5, 5), _conv(GAUSS5), name="WIyt")        # 13
-    wxx1, wxx2 = g.split(wxx, 2)
-    wyy1, wyy2 = g.split(wyy, 2)
-    wxy1, wxy2 = g.split(wxy, 2)
-    wxt1, wxt2 = g.split(wxt, 2)
-    wyt1, wyt2 = g.split(wyt, 2)
+    def optical_flow_lk_src(f1, f2):
+        ix = fe.conv(f1, SOBEL_X / 8.0)   # sobel/8 ~= centered difference
+        iy = fe.conv(f1, SOBEL_Y / 8.0)
+        it = f2 - f1
+        ixx = ix * ix
+        iyy = iy * iy
+        ixy = ix * iy
+        ixt = ix * it
+        iyt = iy * it
+        wxx = fe.conv(ixx, GAUSS5)
+        wyy = fe.conv(iyy, GAUSS5)
+        wxy = fe.conv(ixy, GAUSS5)
+        wxt = fe.conv(ixt, GAUSS5)
+        wyt = fe.conv(iyt, GAUSS5)
+        vx = lib.lk_vx(eps)(wxx, wyy, wxy, wxt, wyt)
+        vy = lib.lk_vy(eps)(wxx, wyy, wxy, wxt, wyt)
+        return {"vx": vx, "vy": vy}
 
-    def vx(a, c, b, tx, ty):
-        det = a * c - b * b
-        return jnp.where(jnp.abs(det) > eps, (-c * tx + b * ty) / det, 0.0)
-
-    def vy(a, c, b, tx, ty):
-        det = a * c - b * b
-        return jnp.where(jnp.abs(det) > eps, (b * tx - a * ty) / det, 0.0)
-
-    g.output(g.pointn([wxx1, wyy1, wxy1, wxt1, wyt1], vx, name="Vx"),  # 14
-             "vx")
-    g.output(g.pointn([wxx2, wyy2, wxy2, wxt2, wyt2], vy, name="Vy"),  # 15
-             "vy")
-    return g
+    return fe.trace(optical_flow_lk_src, (h, w), (h, w),
+                    name="optical_flow_lk")
 
 
 #: name -> (builder, table-I stage count, n_inputs)

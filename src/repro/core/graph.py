@@ -193,7 +193,11 @@ class DataflowGraph:
                name: str | None = None, dtype: Any = None, **kw) -> Channel:
         """``iteration_point2``: out = fn(a, b) elementwise."""
         if a.shape != b.shape:
-            raise GraphError(f"point2 shape mismatch: {a.shape} vs {b.shape}")
+            raise GraphError(
+                f"point2 stage {_stage_label(name)}: elementwise inputs "
+                f"must agree on shape — expected both {a.shape} "
+                f"({a.name!r}), got {b.shape} ({b.name!r})"
+                f"{_src_note(kw.get('meta'))}")
         out = self.channel(a.shape, dtype or a.dtype)
         self.task(name or self._fresh("point2"), "pointN", fn, [a, b], [out], **kw)
         return out
@@ -202,7 +206,11 @@ class DataflowGraph:
                name: str | None = None, dtype: Any = None, **kw) -> Channel:
         shapes = {c.shape for c in chans}
         if len(shapes) != 1:
-            raise GraphError(f"pointn shape mismatch: {sorted(shapes)}")
+            got = ", ".join(f"{c.name!r}={c.shape}" for c in chans)
+            raise GraphError(
+                f"pointn stage {_stage_label(name)}: elementwise inputs "
+                f"must agree on one shape, got {got}"
+                f"{_src_note(kw.get('meta'))}")
         out = self.channel(chans[0].shape, dtype or chans[0].dtype)
         self.task(name or self._fresh("pointn"), "pointN", fn, list(chans),
                   [out], **kw)
@@ -216,7 +224,15 @@ class DataflowGraph:
         halo; see :mod:`repro.core.fusion`).
         """
         if window[0] % 2 != 1 or window[1] % 2 != 1:
-            raise GraphError(f"stencil window must be odd, got {window}")
+            raise GraphError(
+                f"stencil stage {_stage_label(name)}: window must be odd "
+                f"so the halo is symmetric — expected odd (kh, kw), got "
+                f"{window}{_src_note(kw.get('meta'))}")
+        if len(x.shape) != 2:
+            raise GraphError(
+                f"stencil stage {_stage_label(name)}: expects a 2-D "
+                f"plane, got input {x.name!r} of shape {x.shape}"
+                f"{_src_note(kw.get('meta'))}")
         out = self.channel(x.shape, dtype or x.dtype)
         self.task(name or self._fresh("stencil"), "stencil", fn, [x], [out],
                   window=window, **kw)
@@ -384,6 +400,22 @@ class DataflowGraph:
             for ch, v in zip(st.outputs, outs):
                 env[ch] = v.astype(ch.dtype)
         return {ch.name: env[ch] for ch in self.graph_outputs}
+
+
+def _stage_label(name: str | None) -> str:
+    return repr(name) if name else "<unnamed>"
+
+
+def _src_note(meta: dict | None) -> str:
+    """Render the user source location a traced stage carries.
+
+    The tracing frontend (:mod:`repro.frontend`) records the user's
+    ``file.py:line`` in ``Stage.meta["src"]`` at record time; stage
+    validation errors append it so a bad traced program points at the
+    line the user wrote, not at tracer internals.
+    """
+    src = (meta or {}).get("src")
+    return f" (traced at {src})" if src else ""
 
 
 def _fn_fingerprint(fn: Any, _depth: int = 0) -> str:

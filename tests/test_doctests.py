@@ -12,10 +12,13 @@ import pytest
 
 import repro.core.compiler
 import repro.core.schedule
+import repro.frontend.ops
+import repro.frontend.tracer
 import repro.tune.search
 import repro.tune.store
 
 _MODULES = [repro.core.compiler, repro.core.schedule,
+            repro.frontend.ops, repro.frontend.tracer,
             repro.tune.search, repro.tune.store]
 
 

@@ -1,0 +1,458 @@
+"""Tracing frontend: single-source programs == hand-built graphs.
+
+Acceptance tests for the frontend subsystem:
+
+- every Table-I app traced from plain array code has the SAME
+  canonical signature as its hand-built oracle graph, and agrees
+  bit-exactly (atol=0) on the xla and pallas backends;
+- hypothesis: tracing a random expression DAG and running
+  ``reference_eval`` equals evaluating the same expressions directly
+  on arrays, and trace-time CSE never changes results;
+- trace diagnostics carry the USER'S source location and the
+  stage-validation errors name the offending stage;
+- a ``@dataflow_fn``-decorated function compiles, serves through the
+  StreamEngine and tunes via ``tune="auto"`` with no explicit graph,
+  channel or split construction in user code.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.frontend as fe
+from repro.core.apps import APPS, HAND_BUILT
+from repro.core.compiler import compile_graph
+from repro.core.graph import DataflowGraph, GraphError
+from repro.core.transform import default_pipeline
+from repro.frontend import lib
+from repro.frontend.diagnostics import (TraceControlFlowError,
+                                        TraceDtypeError, TraceError,
+                                        TraceLeakError, TraceShapeError)
+
+H, W = 48, 256
+
+
+def _canonical(g: DataflowGraph) -> DataflowGraph:
+    g, _ = default_pipeline().run(g)
+    return g
+
+
+# ----------------------------------------------------------------------
+# Table-I equivalence: traced == hand-built
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("name", sorted(APPS))
+def test_traced_signature_equals_handbuilt(name):
+    traced = APPS[name][0](H, W)
+    manual = _canonical(HAND_BUILT[name](H, W))
+    assert traced.signature() == manual.signature()
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+@pytest.mark.parametrize("name", sorted(APPS))
+def test_traced_bit_exact_vs_handbuilt(name, backend, rng):
+    traced = APPS[name][0](H, W)
+    manual = HAND_BUILT[name](H, W)
+    inputs = {c.name: rng.normal(size=c.shape).astype(np.float32)
+              for c in traced.graph_inputs}
+    out_t = compile_graph(traced, backend=backend)(**inputs)
+    out_m = compile_graph(manual, backend=backend)(**inputs)
+    assert sorted(out_t) == sorted(out_m)
+    for k in out_t:                    # atol=0: bit-exact
+        np.testing.assert_array_equal(np.asarray(out_t[k]),
+                                      np.asarray(out_m[k]))
+
+
+def test_traced_graphs_are_canonical():
+    """trace() returns a validated, already-canonicalized graph."""
+    g = APPS["harris"][0](H, W)
+    g.validate()                       # no multi-reader channels left
+    assert any(s.kind == "split" for s in g.stages)
+    assert isinstance(g.frontend_log, list)
+
+
+# ----------------------------------------------------------------------
+# hypothesis: random expression DAGs (skipped when hypothesis is absent
+# — the rest of this module must still run)
+# ----------------------------------------------------------------------
+try:
+    from hypothesis import given, settings, strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    _HAVE_HYPOTHESIS = False
+
+_BIN = {
+    "add": lambda a, b: a + b,
+    "sub": lambda a, b: a - b,
+    "mul": lambda a, b: a * b,
+    "max": fe.maximum,
+    "min": fe.minimum,
+}
+_UN = {
+    "neg": lambda a: -a,
+    "abs": lambda a: abs(a),
+    "sqrt_abs": lambda a: fe.sqrt(abs(a)),
+    "scale": lambda a: a * 1.7,
+    "offset": lambda a: a + 0.25,
+    "tanh": fe.tanh,
+}
+
+
+if _HAVE_HYPOTHESIS:
+    @st.composite
+    def _recipes(draw):
+        n = draw(st.integers(1, 10))
+        steps, pool = [], 2            # two graph inputs seed the pool
+        for _ in range(n):
+            if draw(st.booleans()):
+                steps.append(("bin", draw(st.sampled_from(sorted(_BIN))),
+                              draw(st.integers(0, pool - 1)),
+                              draw(st.integers(0, pool - 1))))
+            else:
+                steps.append(("un", draw(st.sampled_from(sorted(_UN))),
+                              draw(st.integers(0, pool - 1))))
+            pool += 1
+        return steps
+
+
+def _run_recipe(steps, a, b):
+    pool = [a, b]
+    for s in steps:
+        if s[0] == "bin":
+            pool.append(_BIN[s[1]](pool[s[2]], pool[s[3]]))
+        else:
+            pool.append(_UN[s[1]](pool[s[2]]))
+    return pool[-1]
+
+
+if _HAVE_HYPOTHESIS:
+    @given(steps=_recipes(), seed=st.integers(0, 2**32 - 1))
+    @settings(max_examples=25, deadline=None)
+    def test_trace_reference_eval_equals_direct_eval(steps, seed):
+        rng = np.random.default_rng(seed)
+        av = rng.normal(size=(8, 128)).astype(np.float32)
+        bv = rng.normal(size=(8, 128)).astype(np.float32)
+        g = fe.trace(lambda a, b: _run_recipe(steps, a, b),
+                     (8, 128), (8, 128), name="dag")
+        out = np.asarray(g.reference_eval({"a": av, "b": bv})["out"])
+        ref = np.asarray(_run_recipe(steps, jnp.asarray(av),
+                                     jnp.asarray(bv)))
+        np.testing.assert_array_equal(out, ref)
+
+    @given(steps=_recipes(), seed=st.integers(0, 2**32 - 1))
+    @settings(max_examples=25, deadline=None)
+    def test_cse_never_changes_results(steps, seed):
+        rng = np.random.default_rng(seed)
+        inputs = {"a": rng.normal(size=(8, 128)).astype(np.float32),
+                  "b": rng.normal(size=(8, 128)).astype(np.float32)}
+        fn = lambda a, b: _run_recipe(steps, a, b)   # noqa: E731
+        with_cse = fe.trace(fn, (8, 128), (8, 128), name="dag")
+        without = fe.trace(fn, (8, 128), (8, 128), name="dag", cse=False)
+        np.testing.assert_array_equal(
+            np.asarray(with_cse.reference_eval(inputs)["out"]),
+            np.asarray(without.reference_eval(inputs)["out"]))
+        assert len(with_cse.stages) <= len(without.stages)
+
+
+# ----------------------------------------------------------------------
+# trace-time canonicalization
+# ----------------------------------------------------------------------
+def test_cse_merges_reused_subexpression():
+    def prog(img):
+        a = fe.conv(img, lib.GAUSS3)
+        b = fe.conv(img, lib.GAUSS3)    # structurally identical record
+        return a + b
+
+    g = fe.trace(prog, (8, 128), canonicalize=False)
+    assert sum(1 for s in g.stages if s.kind == "stencil") == 1
+    assert any(line.startswith("cse:") for line in g.frontend_log)
+
+
+def test_constant_folding_elides_identities():
+    def prog(img):
+        return (img * 1.0) + 0.0        # both ops are identities
+
+    g = fe.trace(prog, (8, 128), canonicalize=False)
+    # only the identity wrap that gives the returned input a producer
+    assert [s.kind for s in g.stages] == ["point"]
+    assert sum(1 for line in g.frontend_log
+               if line.startswith("fold:")) == 2
+
+
+def test_scalar_only_subtrees_fold_in_python():
+    def prog(img):
+        return img * (0.5 * 4.0)        # scalar subtree never traced
+
+    g = fe.trace(prog, (8, 128), canonicalize=False)
+    assert len(g.stages) == 1
+    out = g.reference_eval({"img": np.ones((8, 128), np.float32)})["out"]
+    assert float(np.asarray(out)[0, 0]) == 2.0
+
+
+def test_where_reduce_and_comparison(rng):
+    def prog(img):
+        mask = img > 0.0
+        pos = fe.where(mask, img, 0.0)
+        total = fe.reduce(pos, jnp.sum)
+        return {"pos": pos, "total": total}
+
+    xv = rng.normal(size=(16, 128)).astype(np.float32)
+    g = fe.trace(prog, (16, 128))
+    app = compile_graph(g, backend="xla")
+    out = app(img=xv)
+    ref = np.where(xv > 0.0, xv, 0.0).astype(np.float32)
+    np.testing.assert_array_equal(np.asarray(out["pos"]), ref)
+    np.testing.assert_allclose(float(out["total"]), ref.sum(), rtol=1e-6)
+
+
+def test_custom_stage_with_eval_shape_inference(rng):
+    def prog(img):
+        s = fe.custom(lambda x: jnp.sum(x, axis=1, keepdims=True), img)
+        return fe.custom(lambda v, m: v - jnp.broadcast_to(m, v.shape),
+                         img, s)
+
+    xv = rng.normal(size=(16, 128)).astype(np.float32)
+    g = fe.trace(prog, (16, 128))
+    out = np.asarray(compile_graph(g, backend="xla")(img=xv)["out"])
+    np.testing.assert_allclose(out, xv - xv.sum(axis=1, keepdims=True),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_reflected_pow_and_integer_where(rng):
+    def prog(img):
+        decay = 0.5 ** img                       # __rpow__ records
+        ints = fe.where(img > 0.0, 1, 0)         # scalar branches stay int
+        return {"decay": decay, "ints": ints}
+
+    xv = rng.normal(size=(8, 128)).astype(np.float32)
+    g = fe.trace(prog, (8, 128))
+    out = g.reference_eval({"img": xv})
+    np.testing.assert_array_equal(np.asarray(out["decay"]),
+                                  np.asarray(0.5 ** jnp.asarray(xv)))
+    assert np.issubdtype(np.asarray(out["ints"]).dtype, np.integer)
+    np.testing.assert_array_equal(np.asarray(out["ints"]),
+                                  (xv > 0.0).astype(np.int32))
+
+
+def test_custom_explicit_single_output_returns_plane(rng):
+    def prog(img):
+        y = fe.custom(lambda x: x * 2.0, img,
+                      out_shapes=[(8, 128)], out_dtypes=[jnp.float32])
+        return y + 1.0                           # Plane, not a 1-tuple
+
+    xv = rng.normal(size=(8, 128)).astype(np.float32)
+    g = fe.trace(prog, (8, 128))
+    np.testing.assert_array_equal(
+        np.asarray(g.reference_eval({"img": xv})["out"]), xv * 2.0 + 1.0)
+
+
+def test_integer_planes_promote_like_arrays(rng):
+    """Int-Plane arithmetic matches plain-array jnp semantics: true
+    division and float scalars promote to float instead of silently
+    truncating in the int dtype."""
+    def prog(a, b):
+        return {"ratio": a / b, "scaled": a * 0.5, "ident": (a / 1) + 0}
+
+    ispec = fe.spec((4, 128), jnp.int32)
+    g = fe.trace(prog, ispec, ispec)
+    av = np.full((4, 128), 3, np.int32)
+    bv = np.full((4, 128), 2, np.int32)
+    out = g.reference_eval({"a": av, "b": bv})
+    assert float(np.asarray(out["ratio"])[0, 0]) == 1.5
+    assert float(np.asarray(out["scaled"])[0, 0]) == 1.5
+    # x/1 must not fold on an int plane (the result dtype changes)
+    assert np.issubdtype(np.asarray(out["ident"]).dtype, np.floating)
+    # ... but int scalars on int planes stay integral
+    g2 = fe.trace(lambda a: a * 2 + 1, ispec)
+    out2 = np.asarray(g2.reference_eval({"a": av})["out"])
+    assert np.issubdtype(out2.dtype, np.integer)
+    np.testing.assert_array_equal(out2, av * 2 + 1)
+
+
+def test_where_accepts_numpy_scalar_branches(rng):
+    def prog(img):
+        return fe.where(img > 0.0, img, np.float32(0.0))
+
+    xv = rng.normal(size=(8, 128)).astype(np.float32)
+    out = fe.trace(prog, (8, 128)).reference_eval({"img": xv})["out"]
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.where(xv > 0.0, xv, 0.0))
+    with pytest.raises(TraceError):
+        fe.trace(lambda img: fe.where(img > 0.0, img, np.ones((8, 128))),
+                 (8, 128))
+
+
+def test_empty_return_raises():
+    with pytest.raises(TraceLeakError):
+        fe.trace(lambda img: {}, (8, 128))
+    with pytest.raises(TraceLeakError):
+        fe.trace(lambda img: (), (8, 128))
+
+
+def test_returning_an_input_gets_identity_stage(rng):
+    g = fe.trace(lambda img: img, (8, 128))
+    xv = rng.normal(size=(8, 128)).astype(np.float32)
+    np.testing.assert_array_equal(
+        np.asarray(g.reference_eval({"img": xv})["out"]), xv)
+
+
+# ----------------------------------------------------------------------
+# diagnostics: errors point at USER code
+# ----------------------------------------------------------------------
+def test_shape_mismatch_reports_user_line():
+    def bad(a, b):
+        return a + b                    # <- the offending user line
+
+    with pytest.raises(TraceShapeError) as ei:
+        fe.trace(bad, (8, 128), (16, 128))
+    msg = str(ei.value)
+    assert "(8, 128)" in msg and "(16, 128)" in msg
+    assert "test_frontend.py" in msg    # user file, not tracer.py
+
+
+def test_data_dependent_control_flow_raises():
+    def bad(img):
+        if img > 0.0:                   # bool(Plane)
+            return img
+        return -img
+
+    with pytest.raises(TraceControlFlowError) as ei:
+        fe.trace(bad, (8, 128))
+    assert "fe.where" in str(ei.value)
+    assert "test_frontend.py" in str(ei.value)
+
+
+def test_arithmetic_on_bool_plane_raises():
+    with pytest.raises(TraceDtypeError) as ei:
+        fe.trace(lambda img: (img > 0.0) + 1.0, (8, 128))
+    assert "fe.where" in str(ei.value)
+
+
+def test_plane_leak_into_numpy_raises():
+    with pytest.raises(TraceLeakError):
+        fe.trace(lambda img: np.asarray(img), (8, 128))
+
+
+def test_non_plane_return_raises():
+    with pytest.raises(TraceLeakError) as ei:
+        fe.trace(lambda img: 3.0, (8, 128))
+    assert "must return Plane" in str(ei.value)
+
+
+def test_indexing_hints_at_window():
+    with pytest.raises(TraceLeakError) as ei:
+        fe.trace(lambda img: img[0], (8, 128))
+    assert "fe.window" in str(ei.value)
+
+
+def test_traced_stages_carry_src():
+    g = fe.trace(lambda img: fe.conv(img, lib.GAUSS3), (8, 128))
+    stencil = next(s for s in g.stages if s.kind == "stencil")
+    assert "test_frontend.py" in stencil.meta["src"]
+
+
+def test_mixed_pointfn_call_raises():
+    with pytest.raises(TraceError) as ei:
+        fe.trace(lambda img: lib.luma_rec601(img, img, 1.0), (8, 128))
+    assert "factory" in str(ei.value)
+
+
+def test_spec_count_mismatch_raises():
+    with pytest.raises(TraceError) as ei:
+        fe.trace(lambda a, b: a + b, (8, 128))
+    assert "2 inputs" in str(ei.value)
+
+
+# ----------------------------------------------------------------------
+# stage validation errors (satellite: name + expected vs got + src)
+# ----------------------------------------------------------------------
+def test_point2_error_names_stage_and_shapes():
+    g = DataflowGraph("v")
+    a = g.input("a", (8, 128))
+    b = g.input("b", (16, 128))
+    with pytest.raises(GraphError) as ei:
+        g.point2(a, b, lambda x, y: x + y, name="merge")
+    msg = str(ei.value)
+    assert "'merge'" in msg and "(8, 128)" in msg and "(16, 128)" in msg
+
+
+def test_stencil_error_names_stage_and_window():
+    g = DataflowGraph("v")
+    x = g.input("x", (8, 128))
+    with pytest.raises(GraphError) as ei:
+        g.stencil(x, (2, 3), lambda p: p[0], name="blur")
+    assert "'blur'" in str(ei.value) and "odd" in str(ei.value)
+    r = g.reduce(x, jnp.sum, out_shape=(), name="total")
+    with pytest.raises(GraphError) as ei2:
+        g.stencil(r, (3, 3), lambda p: p[0], name="win0d")
+    assert "2-D" in str(ei2.value) and "'win0d'" in str(ei2.value)
+
+
+def test_stage_error_carries_traced_src():
+    g = DataflowGraph("v")
+    a = g.input("a", (8, 128))
+    b = g.input("b", (16, 128))
+    with pytest.raises(GraphError) as ei:
+        g.point2(a, b, lambda x, y: x + y, name="merge",
+                 meta={"src": "user_prog.py:42"})
+    assert "user_prog.py:42" in str(ei.value)
+
+
+# ----------------------------------------------------------------------
+# @dataflow_fn: compile, serve, tune — no explicit graph anywhere
+# ----------------------------------------------------------------------
+def test_dataflow_fn_call_compiles_and_memoizes(rng):
+    @fe.dataflow_fn(backend="xla")
+    def doubler(img):
+        return img * 2.0
+
+    xv = rng.normal(size=(8, 128)).astype(np.float32)
+    np.testing.assert_array_equal(np.asarray(doubler(xv)), xv * 2.0)
+    assert doubler.compile(xv) is doubler.compile(xv)     # memoized
+    assert doubler.trace(xv).signature() == \
+        doubler.graph_for({"img": xv}).signature()
+
+
+def test_dataflow_fn_multi_output_returns_dict(rng):
+    @fe.dataflow_fn(backend="xla")
+    def pair(img):
+        return {"twice": img + img, "sq": img * img}
+
+    xv = rng.normal(size=(8, 128)).astype(np.float32)
+    out = pair(xv)
+    np.testing.assert_array_equal(np.asarray(out["twice"]), xv + xv)
+    np.testing.assert_array_equal(np.asarray(out["sq"]), xv * xv)
+
+
+def test_dataflow_fn_serves_through_engine(rng):
+    from repro.runtime import StreamEngine
+
+    @fe.dataflow_fn
+    def edge(img):
+        blur = fe.conv(img, lib.GAUSS3)
+        return img - blur
+
+    frames = [rng.normal(size=(16, 128)).astype(np.float32)
+              for _ in range(4)]
+    with StreamEngine(backend="xla", max_batch=2) as eng:
+        handles = [eng.submit(edge.graph_for({"img": f}), {"img": f})
+                   for f in frames]
+        results = [h.result(timeout=60.0) for h in handles]
+    for f, res in zip(frames, results):
+        ref = np.asarray(
+            edge.trace(f).reference_eval({"img": f})["out"])
+        np.testing.assert_array_equal(res["out"], ref)
+
+
+def test_dataflow_fn_tunes_with_auto(tmp_path, rng):
+    from repro.tune import TuningCache
+
+    @fe.dataflow_fn(backend="xla", tune="auto")
+    def smooth(img):
+        return fe.conv(img, lib.GAUSS3)
+
+    cache = TuningCache(str(tmp_path))
+    xv = rng.normal(size=(64, 512)).astype(np.float32)
+    app = smooth.compile(xv, tune_cache=cache)
+    assert app.schedule.groups[0].tile_source in ("measured", "cache")
+    ref = np.asarray(
+        smooth.trace(xv).reference_eval({"img": xv})["out"])
+    np.testing.assert_array_equal(np.asarray(app(img=xv)["out"]), ref)
