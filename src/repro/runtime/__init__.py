@@ -9,12 +9,13 @@ namespace deliberately does not.
 """
 from repro.runtime.batching import MicroBatcher
 from repro.runtime.cache import CacheStats, CompileCache
-from repro.runtime.engine import QueueFullError, StreamEngine, StreamRequest
+from repro.runtime.engine import (CancelledError, QueueFullError,
+                                  StreamEngine, StreamRequest)
 from repro.runtime.slots import SlotPool
-from repro.runtime.telemetry import Telemetry, modeled_latency
+from repro.runtime.telemetry import PHASES, Telemetry, modeled_latency
 
 __all__ = [
-    "MicroBatcher", "CacheStats", "CompileCache", "QueueFullError",
-    "StreamEngine", "StreamRequest", "SlotPool", "Telemetry",
-    "modeled_latency",
+    "MicroBatcher", "CacheStats", "CompileCache", "CancelledError",
+    "QueueFullError", "StreamEngine", "StreamRequest", "SlotPool",
+    "Telemetry", "PHASES", "modeled_latency",
 ]

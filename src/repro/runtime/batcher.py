@@ -164,8 +164,12 @@ class ContinuousBatcher:
             eos = r.eos_id >= 0 and int(nxt[i]) == r.eos_id
             if over or eos or self.lengths[i] >= self.max_len - 1:
                 r.done = True
-                self.pool.retire(i)
-                self.lengths[i] = 0
+        # continuous refill: reap every finished sequence's slot (the
+        # machinery shared with StreamEngine's in-flight launch pool),
+        # then the next _admit() backfills them without a drain barrier
+        for slot in self.pool.ready(lambda r: r.done):
+            self.pool.retire(slot)
+            self.lengths[slot] = 0
         return produced
 
     def run_to_completion(self, max_steps: int = 10_000) -> list[Request]:

@@ -4,22 +4,38 @@ Per-request dispatch pays the host-side launch overhead once per
 item; a serving engine under load amortizes it by stacking requests
 whose apps share a :meth:`~repro.core.host.CompiledApp.signature`
 along a new leading axis and launching a single ``vmap``-ped kernel.
-The batched callable is built once per signature (jit keeps it warm)
-with every input donated — the stacked staging buffers are created
-per batch and never reused, so their HBM can be recycled in place,
-the launcher-level analogue of the paper's buffer reuse between
-command-queue runs.
+
+Two host-side overheads are engineered out of the hot path:
+
+- **bucketed pad shapes** — padding every batch to ``max_batch``
+  makes a 2-request batch pay a 32-wide launch.  ``launch`` instead
+  pads to the next power-of-two *bucket* (rounded to a replica
+  multiple), and each ``(signature, bucket)`` pair gets its own
+  jitted entry in :attr:`_fns` — a small, fixed family of compiled
+  shapes per app instead of one oversized one.  ``bucket_launches``
+  records which buckets actually ran.
+- **zero-copy staging** — request rows are written directly into
+  *pinned* per-bucket staging buffers (allocated once, rotated
+  ``staging_depth`` deep to stay clear of in-flight transfers)
+  instead of re-stacking a fresh host array per batch: one
+  ``memcpy`` per row, no per-batch allocation, the software analogue
+  of FLOWER's reused XRT buffer objects between command-queue runs.
+
+The batched callable is built per bucket (jit keeps it warm) with
+every input donated — the staged device buffers are never reused, so
+their HBM can be recycled in place.
 
 With ``replicas > 1`` the padded batch is additionally *sharded* over
 a 1-D device mesh: replica ``r`` executes rows ``[r*B/k, (r+1)*B/k)``
 of every staging buffer — the batch-parallel farm (FastFlow's
 ``ff_farm`` worker replication, FLOWER's kernel replication) on top of
-the same single-launch dispatch.  The padded width is held to a
+the same single-launch dispatch.  Bucket widths are held to a
 multiple of the replica count so every launch keeps one compiled
 kernel shape per replica.
 """
 from __future__ import annotations
 
+import time
 import warnings
 from typing import Any, Callable, Sequence
 
@@ -37,13 +53,13 @@ class MicroBatcher:
     """Stacks same-signature requests and launches one batched kernel.
 
     ``launch`` is asynchronous: it returns the stacked device outputs
-    without blocking, so the engine can keep a second batch in flight
-    (double buffering) before forcing the first to host memory.
+    without blocking, so the engine can keep further batches in flight
+    (slot-pool pipelining) before forcing the first to host memory.
     """
 
     def __init__(self, max_batch: int = 8, donate: bool = True,
                  replicas: int = 1, replica_axis: str = "replica",
-                 devices: list | None = None):
+                 devices: list | None = None, staging_depth: int = 2):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         if replicas < 1:
@@ -53,92 +69,220 @@ class MicroBatcher:
                 f"max_batch={max_batch} must divide evenly over "
                 f"replicas={replicas}: every replica serves "
                 f"max_batch/replicas rows of the padded batch")
+        if staging_depth < 1:
+            raise ValueError(
+                f"staging_depth must be >= 1, got {staging_depth}")
         self.max_batch = max_batch
         self.donate = donate
         self.replicas = replicas
         self.replica_axis = replica_axis
+        # donation is categorically ignored on CPU (XLA warns on every
+        # call); resolve it per-platform up front so CPU never builds a
+        # donating entry — swapping the entry later would recompile it
+        try:
+            plat = ((devices[0] if devices else jax.devices()[0])
+                    .platform)
+        except Exception:
+            plat = "cpu"
+        self._donate = donate and plat != "cpu"
+        #: how many launches of one (sig, width) bucket get distinct
+        #: staging buffers before the first is rewritten; keep STRICTLY
+        #: greater than the number of concurrently unforced launches —
+        #: JAX's CPU backend zero-copy aliases aligned numpy inputs, so
+        #: rewriting a rotation mutates the device-side view of any
+        #: batch that has not finished executing yet
+        self.staging_depth = staging_depth
         self._mesh = None
         if replicas > 1:
             from repro.parallel.sharding import replica_mesh
             self._mesh = replica_mesh(replicas, axis=replica_axis,
                                       devices=devices)
-        self._fns: dict[str, Callable] = {}
+        #: jitted batched kernels, one per (signature, bucket width)
+        self._fns: dict[tuple[str, int], Callable] = {}
+        #: buckets whose first launch already probed donation support
+        self._probed: set[tuple[str, int]] = set()
+        #: pinned staging buffers: (sig, width) -> staging_depth
+        #: rotations of per-input host arrays
+        self._staging: dict[tuple[str, int], list[list[np.ndarray]]] = {}
+        self._staging_clock: dict[tuple[str, int], int] = {}
+        #: width -> number of launches that used that bucket
+        self.bucket_launches: dict[int, int] = {}
 
-    def batched_fn(self, app: CompiledApp) -> Callable:
-        """The jitted, vmapped, input-donating kernel for ``app``.
+    # ------------------------------------------------------------------
+    # bucketed pad widths
+    # ------------------------------------------------------------------
+    def bucket(self, n: int) -> int:
+        """Padded width for an ``n``-request batch.
 
-        With replicas, batch-dim shardings on every input/output place
-        each replica's rows on its own device; XLA then runs the k
-        copies of the kernel concurrently with no cross-device traffic
-        (the farm has no inter-worker channels).
+        Next power of two >= ``n``, rounded up to a replica multiple
+        and capped at ``max_batch`` — so a 2-request batch launches a
+        2-wide kernel, not a ``max_batch``-wide one, and the set of
+        compiled batch shapes per app stays logarithmic.
         """
-        sig = app.signature()
-        fn = self._fns.get(sig)
+        if n < 1:
+            raise ValueError(f"bucket width needs n >= 1, got {n}")
+        w = 1
+        while w < n:
+            w <<= 1
+        w = -(-w // self.replicas) * self.replicas
+        return min(w, self.max_batch)
+
+    def batched_fn(self, app: CompiledApp, width: int | None = None) -> Callable:
+        """The jitted, vmapped, input-donating kernel for one bucket.
+
+        Keyed on ``(signature, width)`` so every bucket keeps its own
+        compiled entry (``width=None`` keys a single generic entry
+        that jit re-specializes per shape).  With replicas, batch-dim
+        shardings on every input/output place each replica's rows on
+        its own device; XLA then runs the k copies of the kernel
+        concurrently with no cross-device traffic (the farm has no
+        inter-worker channels).
+        """
+        key = (app.signature(), width if width is not None else -1)
+        fn = self._fns.get(key)
         if fn is None:
-            donate_argnums = (tuple(range(len(app.input_names)))
-                              if self.donate else ())
-            kwargs: dict[str, Any] = dict(donate_argnums=donate_argnums)
-            if self._mesh is not None:
-                batch_row = NamedSharding(self._mesh, P(self.replica_axis))
-                kwargs["in_shardings"] = tuple(
-                    batch_row for _ in app.input_names)
-                kwargs["out_shardings"] = tuple(
-                    batch_row for _ in app.output_names)
-            fn = jax.jit(jax.vmap(app.fn), **kwargs)
-            self._fns[sig] = fn
+            fn = self._build_fn(app, donate=self._donate)
+            self._fns[key] = fn
         return fn
 
-    def stack(self, app: CompiledApp, requests: Sequence[Any],
-              pad_to: int | None = None) -> list[np.ndarray]:
-        """Stack each graph input across requests along a leading axis.
+    def _build_fn(self, app: CompiledApp, donate: bool) -> Callable:
+        donate_argnums = (tuple(range(len(app.input_names)))
+                          if donate else ())
+        kwargs: dict[str, Any] = dict(donate_argnums=donate_argnums)
+        if self._mesh is not None:
+            batch_row = NamedSharding(self._mesh, P(self.replica_axis))
+            kwargs["in_shardings"] = tuple(
+                batch_row for _ in app.input_names)
+            kwargs["out_shardings"] = tuple(
+                batch_row for _ in app.output_names)
+        return jax.jit(jax.vmap(app.fn), **kwargs)
 
-        With ``pad_to`` the batch is padded (repeating the last row) to
-        a fixed width, so every launch reuses ONE compiled kernel shape
-        instead of re-tracing per ragged batch size; the width is
-        always rounded up to a multiple of the replica count.  Rejects
-        an empty request list and per-request shape mismatches with
-        precise errors instead of letting ``np.stack`` fail obscurely —
-        the engine's ``_next_batch`` can race to empty at shutdown, and
-        a 0-d/scalar channel input must stack to a ``(B,)`` staging
+    def _call(self, app: CompiledApp, width: int,
+              args: Sequence[np.ndarray]) -> Any:
+        """Invoke one bucket's kernel; steady state is a bare call.
+
+        CPU resolved donation away at construction, so the common
+        path is a single dict lookup + call.  On other backends the
+        first launch of each bucket runs under a warning probe: if the
+        backend reports it ignored donation anyway (the catch/emit
+        machinery costs more than a small batch's kernel), the
+        bucket's entry is rebuilt without donation — one extra compile
+        there, zero warning overhead ever after.  Backends that honor
+        donation never warn and keep their donating entry.
+        """
+        key = (app.signature(), width)
+        fn = self.batched_fn(app, width)
+        if not self._donate or key in self._probed:
+            return fn(*args)
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            outs = fn(*args)
+        donation_ignored = False
+        for rec in caught:
+            if "donated" in str(rec.message):
+                donation_ignored = True
+            else:                      # not ours: let it through
+                warnings.warn_explicit(rec.message, rec.category,
+                                       rec.filename, rec.lineno)
+        if donation_ignored:
+            self._fns[key] = self._build_fn(app, donate=False)
+        self._probed.add(key)
+        return outs
+
+    # ------------------------------------------------------------------
+    # zero-copy staging
+    # ------------------------------------------------------------------
+    def _staging_bufs(self, app: CompiledApp, width: int) -> list[np.ndarray]:
+        """The next rotation of pinned staging buffers for one bucket."""
+        key = (app.signature(), width)
+        rotations = self._staging.get(key)
+        if rotations is None:
+            rotations = [
+                [np.zeros((width,) + tuple(ch.shape), np.dtype(ch.dtype))
+                 for ch in app.graph.graph_inputs]
+                for _ in range(self.staging_depth)
+            ]
+            self._staging[key] = rotations
+            self._staging_clock[key] = 0
+        clock = self._staging_clock[key]
+        self._staging_clock[key] = clock + 1
+        return rotations[clock % self.staging_depth]
+
+    def stack(self, app: CompiledApp, requests: Sequence[Any],
+              pad_to: int | None = None,
+              check_shapes: bool = True) -> list[np.ndarray]:
+        """Write each request's inputs into the pinned staging buffers.
+
+        Rows land directly in a preallocated ``(width, *shape)`` host
+        buffer (one memcpy per row — no per-batch allocation or
+        restack); rows beyond ``len(requests)`` keep whatever the
+        previous batch staged (padding rows are computed but sliced
+        away, so their values are irrelevant).  ``pad_to`` forces a
+        width; by default the power-of-two :meth:`bucket` is used.
+        The returned buffers are valid until ``staging_depth`` more
+        batches of the same (signature, width) are staged.  Rejects an
+        empty request list and per-request shape mismatches with
+        precise errors instead of letting the row copy fail obscurely
+        — the engine's batch formation can race to empty at shutdown,
+        and a 0-d/scalar channel input must stage into a ``(B,)``
         buffer, not crash.
         """
         if not requests:
             raise ValueError(
                 "cannot stack an empty request batch (engine shutdown "
                 "race?); callers must skip empty batches")
-        width = max(pad_to or 0, len(requests))
+        width = max(pad_to or 0, self.bucket(len(requests)), len(requests))
         width = -(-width // self.replicas) * self.replicas
-        args = []
-        for ch in app.graph.graph_inputs:
-            # stack on the host (one memcpy per row) so the launch
-            # transfers ONE contiguous staging buffer instead of
-            # dispatching a per-row device op
-            rows = []
-            for idx, r in enumerate(requests):
-                row = np.asarray(r.inputs[ch.name], dtype=np.dtype(ch.dtype))
-                if row.shape != tuple(ch.shape):
-                    raise ValueError(
-                        f"request[{idx}] input {ch.name!r}: expected "
-                        f"shape {tuple(ch.shape)}, got {row.shape}")
-                rows.append(row)
-            rows.extend(rows[-1:] * (width - len(rows)))
-            args.append(np.stack(rows))
+        args = self._staging_bufs(app, width)
+        for j, ch in enumerate(app.graph.graph_inputs):
+            buf = args[j]
+            name = ch.name
+            if check_shapes:
+                shape = tuple(ch.shape)
+                for idx, r in enumerate(requests):
+                    row = np.asarray(r.inputs[name])
+                    if row.shape != shape:
+                        raise ValueError(
+                            f"request[{idx}] input {name!r}: expected "
+                            f"shape {shape}, got {row.shape}")
+                    buf[idx, ...] = row
+            else:
+                # engine path: rows were shape-checked at submit();
+                # numpy's row assignment casts + copies in one shot
+                for idx, r in enumerate(requests):
+                    buf[idx, ...] = r.inputs[name]
         return args
 
     def launch(self, app: CompiledApp, requests: Sequence[Any],
-               pad_to: int | None = None) -> dict[str, jnp.ndarray]:
+               pad_to: int | None = None,
+               timings: dict[str, float] | None = None,
+               check_shapes: bool = True) -> dict[str, jnp.ndarray]:
         """Dispatch one batched kernel; return stacked outputs, unblocked.
 
         ``requests`` need only expose ``.inputs`` (a name->array dict);
-        they must all share ``app``'s signature.  Output rows beyond
-        ``len(requests)`` are padding and must be ignored by the caller.
+        they must all share ``app``'s signature.  The batch is padded
+        to its power-of-two bucket (or ``pad_to``); output rows beyond
+        ``len(requests)`` are padding and must be ignored by the
+        caller.  ``timings``, when given, receives the host-side
+        ``stack`` (staging-copy) and ``launch`` (dispatch) phase
+        durations in seconds.
         """
         if len(requests) > self.max_batch:
             raise ValueError(
                 f"batch of {len(requests)} exceeds max_batch={self.max_batch}")
-        args = self.stack(app, requests, pad_to=pad_to)
-        with warnings.catch_warnings():
-            # CPU/interpret backends ignore donation; stay quiet about it
-            warnings.filterwarnings("ignore", message=".*donated.*")
-            outs = self.batched_fn(app)(*args)
+        if not requests:
+            raise ValueError(
+                "cannot stack an empty request batch (engine shutdown "
+                "race?); callers must skip empty batches")
+        t0 = time.perf_counter()
+        args = self.stack(app, requests, pad_to=pad_to,
+                          check_shapes=check_shapes)
+        width = args[0].shape[0] if args else len(requests)
+        t1 = time.perf_counter()
+        outs = self._call(app, width, args)
+        t2 = time.perf_counter()
+        self.bucket_launches[width] = self.bucket_launches.get(width, 0) + 1
+        if timings is not None:
+            timings["stack"] = t1 - t0
+            timings["launch"] = t2 - t1
         return dict(zip(app.output_names, outs))

@@ -61,9 +61,22 @@ def _opt_repr(v: Any) -> str:
 
 @dataclasses.dataclass
 class CacheStats:
+    """Compile-cache counters, accounted **per compile event**.
+
+    ``hits``/``misses`` count *unique resolutions*: the first time a
+    given graph object (per backend/options) is resolved against the
+    structural table, it either reuses an existing compile (hit) or
+    triggers one (miss).  Re-submitting the same object — every
+    request of a serving stream — is a ``requests`` tick only, so a
+    batched engine serving one app N times reports 1 miss and N
+    requests, not N-1 phantom hits: ``hit_rate`` measures how often
+    the cache avoided a compile, not how often it was asked.
+    """
+
     hits: int = 0
     misses: int = 0
     evictions: int = 0
+    requests: int = 0
 
     @property
     def hit_rate(self) -> float:
@@ -72,7 +85,8 @@ class CacheStats:
 
     def as_dict(self) -> dict[str, float]:
         return {"hits": self.hits, "misses": self.misses,
-                "evictions": self.evictions, "hit_rate": self.hit_rate}
+                "evictions": self.evictions, "requests": self.requests,
+                "hit_rate": self.hit_rate}
 
 
 class _PendingCompile:
@@ -105,8 +119,10 @@ class CompileCache:
     Thread-safe: the serving engine compiles on submitter threads.
     Tracing happens OUTSIDE the table lock — a miss installs a
     per-key :class:`_PendingCompile`, so concurrent submits of the
-    same graph trace exactly once (one miss, waiters count as hits)
-    while hits for other, already-compiled apps proceed unstalled.
+    same graph trace exactly once (one miss; waiters that are
+    *distinct* graph objects count as hits, repeats of the same
+    object count as ``requests`` — see :class:`CacheStats`) while
+    hits for other, already-compiled apps proceed unstalled.
     """
 
     def __init__(self, maxsize: int = 64,
@@ -142,9 +158,12 @@ class CompileCache:
         okey = (backend, tuple(sorted((k, _opt_repr(v))
                                       for k, v in compile_kwargs.items())))
         with self._lock:
+            self.stats.requests += 1
             per = self._by_graph.get(graph)
             if per is not None and okey in per:
-                self.stats.hits += 1
+                # repeat of an already-resolved object: a served
+                # request, not a fresh cache consultation (hit/miss
+                # are per compile event — see CacheStats)
                 return per[okey]
             glock = self._graph_locks.get(graph)
             if glock is None:
@@ -158,8 +177,7 @@ class CompileCache:
         with self._lock:
             per = self._by_graph.get(graph)
             if per is not None and okey in per:   # a peer just filled it
-                self.stats.hits += 1
-                return per[okey]
+                return per[okey]     # same object: same compile event
             key = self._key(graph.signature(), backend, compile_kwargs)
             app = self._entries.get(key)
             if app is not None:

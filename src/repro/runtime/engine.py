@@ -3,32 +3,56 @@
 FLOWER's generated host code sets up an XRT context, buffers and a
 command queue and overlaps H2D / kernel / D2H.  This module is that
 runtime layer for compiled dataflow apps, grown into a long-lived
-service:
+service built around **continuous batching**: the submit→dispatch→
+complete hot path never drains between launches — new work joins
+while earlier work is still in flight, the streaming idiom of the
+paper's dataflow machines applied to the host side.
 
-- **command queue** — a *bounded* FIFO of :class:`StreamRequest`; a
-  full queue exerts backpressure on ``submit`` exactly like a finite
-  FIFO in :func:`repro.core.simulate.simulate_pipeline` (block, or
-  raise :class:`QueueFullError` when ``block=False``).
-- **compile cache** — ``submit`` accepts raw graphs; repeated
-  topologies hit :class:`~repro.runtime.cache.CompileCache` instead
-  of re-tracing.
-- **micro-batching** — consecutive same-signature requests are
-  stacked and launched as ONE vmapped kernel with donated staging
-  buffers (:class:`~repro.runtime.batching.MicroBatcher`).
-- **double-buffered dispatch** — launches go into a
-  :class:`~repro.runtime.slots.SlotPool` of in-flight slots (default
-  2 == depth-2 FIFO).  The engine only forces a batch to host memory
-  when the pool is full or the queue idles, so batch k+1 is dispatched
-  while batch k is still executing — ``jax.block_until_ready``-free
+- **per-app admission queues** — each app (signature) gets its own
+  bounded FIFO; a full queue exerts backpressure on ``submit``
+  exactly like a finite FIFO in
+  :func:`repro.core.simulate.simulate_pipeline` (block, or raise
+  :class:`QueueFullError` when ``block=False``).  Shedding is *per
+  app*: one hot graph saturating its queue cannot reject or starve
+  traffic for the others.
+- **weighted fairness** — batches are formed across apps by
+  deficit-weighted round-robin (``app_weights`` / ``set_app_weight``):
+  an app with weight 2 forms two batches per cycle to a weight-1
+  app's one, and every app with queued work is visited each cycle.
+- **deadline-based batch formation** — a batch closes on ``max_batch``
+  OR a per-request latency budget, whichever comes first.  The budget
+  adapts from the observed per-batch service time (EWMA via
+  :class:`~repro.runtime.telemetry.Telemetry`): a request never waits
+  longer for stragglers than a fraction of the time its batch will
+  take to execute.  When the device is idle the engine is
+  work-conserving and dispatches immediately — batching only ever
+  delays a request when there is in-flight work to overlap with.
+- **bucketed, zero-copy dispatch** — batches are padded to
+  power-of-two buckets (not ``max_batch``), each bucket with its own
+  compiled entry, and request rows are written directly into pinned
+  staging buffers (:class:`~repro.runtime.batching.MicroBatcher`).
+- **continuous slot refill** — launches go into a
+  :class:`~repro.runtime.slots.SlotPool` of in-flight slots.  The
+  worker *reaps* slots the moment their outputs are ready (a
+  non-blocking ``is_ready`` probe) and refills them with the next
+  batch, so the pool never drains to a barrier; it only blocks on the
+  oldest slot when every slot is busy — ``jax.block_until_ready``-free
   pipelining on JAX's async dispatch.
-- **telemetry** — queue depth, p50/p99 latency, throughput and cache
-  hit-rate, reported side-by-side with the Fig. 1
+- **cancellation** — a caller that times out can ``cancel()`` its
+  request; cancelled requests free their queue slot immediately and
+  are skipped at batch formation, so an abandoned request never leaks
+  capacity.
+- **telemetry** — queue depth, p50/p99 latency, throughput, shed and
+  cancel counts, and a per-phase breakdown of the hot path
+  (queue-wait / form / stack / launch / readback), reported
+  side-by-side with the Fig. 1
   :func:`~repro.core.simulate.analytic_latency` prediction
   (:meth:`StreamEngine.report`).
+
+See ``docs/serving.md`` for the operator-facing tour of all of this.
 """
 from __future__ import annotations
 
-import queue as _queue
 import threading
 import time
 from collections import deque
@@ -41,13 +65,25 @@ from repro.core.host import CompiledApp
 from repro.runtime.batching import MicroBatcher
 from repro.runtime.cache import CompileCache
 from repro.runtime.slots import SlotPool
-from repro.runtime.telemetry import Telemetry, modeled_latency
+from repro.runtime.telemetry import (_SERVICE_ALPHA, Telemetry,
+                                     modeled_latency)
 
-__all__ = ["QueueFullError", "StreamRequest", "StreamEngine"]
+__all__ = ["QueueFullError", "CancelledError", "StreamRequest",
+           "StreamEngine"]
+
+#: adaptive formation budget = this fraction of the service-time EWMA
+_BUDGET_FRACTION = 0.5
+#: clamp on the adaptive formation budget (seconds)
+_BUDGET_MIN_S = 1e-4
+_BUDGET_MAX_S = 2e-2
 
 
 class QueueFullError(RuntimeError):
-    """The bounded request queue rejected a non-blocking submit."""
+    """An app's bounded request queue rejected a submit (shed)."""
+
+
+class CancelledError(RuntimeError):
+    """The request was cancelled by its caller before completion."""
 
 
 class StreamRequest:
@@ -57,35 +93,126 @@ class StreamRequest:
         self.app = app
         self.inputs = dict(inputs)
         self.t_submit = time.perf_counter()
-        self._done = threading.Event()
+        self.t_taken: float | None = None
+        self._lock = threading.Lock()
+        # the wakeup Event is allocated lazily by the first waiter: a
+        # request that completes before anyone blocks on it (the common
+        # case under load — callers poll handles in submission order)
+        # never pays for one
+        self._event: threading.Event | None = None
+        self._completed = False
         self._result: dict[str, np.ndarray] | None = None
         self._error: BaseException | None = None
+        self._release = None          # engine hook: free queue slot on cancel
 
     def done(self) -> bool:
-        return self._done.is_set()
+        return self._completed
+
+    def cancelled(self) -> bool:
+        """True when the request was abandoned via :meth:`cancel`."""
+        return isinstance(self._error, CancelledError)
+
+    def _wait(self, timeout: float | None) -> bool:
+        if self._completed:
+            return True
+        with self._lock:
+            if self._completed:
+                return True
+            if self._event is None:
+                self._event = threading.Event()
+            event = self._event
+        return event.wait(timeout)
 
     def result(self, timeout: float | None = None) -> dict[str, np.ndarray]:
-        """Block until served; return per-output host arrays."""
-        if not self._done.wait(timeout):
-            raise TimeoutError("request not served within timeout")
+        """Block until served; return per-output host arrays.
+
+        Raises :class:`TimeoutError` when ``timeout`` expires — the
+        request is still queued and will be served; call
+        :meth:`cancel` to abandon it without leaking its queue slot.
+        """
+        if not self._wait(timeout):
+            raise TimeoutError("request not served within timeout; "
+                               "cancel() to abandon it")
         if self._error is not None:
             raise self._error
         assert self._result is not None
         return self._result
 
     def exception(self, timeout: float | None = None) -> BaseException | None:
-        if not self._done.wait(timeout):
-            raise TimeoutError("request not served within timeout")
+        if not self._wait(timeout):
+            raise TimeoutError("request not served within timeout; "
+                               "cancel() to abandon it")
         return self._error
 
-    # engine-side completion
-    def _finish(self, result: dict[str, np.ndarray]) -> None:
-        self._result = result
-        self._done.set()
+    def cancel(self) -> bool:
+        """Abandon a not-yet-completed request.
 
-    def _fail(self, err: BaseException) -> None:
-        self._error = err
-        self._done.set()
+        Returns True if the request was cancelled (it will never
+        produce a result; ``result()`` raises :class:`CancelledError`),
+        False if it had already completed.  A cancelled request frees
+        its queue slot immediately; if its batch is already in flight
+        the computed row is simply discarded on retirement.
+        """
+        with self._lock:
+            if self._completed:
+                return False
+            self._error = CancelledError("request cancelled by caller")
+            self._completed = True
+            if self._event is not None:
+                self._event.set()
+        release, self._release = self._release, None
+        if release is not None:
+            release(self)
+        return True
+
+    # engine-side completion (first of finish/fail/cancel wins)
+    def _finish_quiet(self, result: dict[str, np.ndarray]
+                      ) -> tuple[bool, "threading.Event | None"]:
+        """Claim completion WITHOUT waking waiters.
+
+        Returns ``(won, event)``; the caller must ``event.set()`` once
+        its own bookkeeping (telemetry, slot release) is consistent —
+        so a client that wakes from ``result()`` and immediately calls
+        ``report()`` sees its own completion counted.
+        """
+        with self._lock:
+            if self._completed:
+                return False, None
+            self._result = result
+            self._completed = True
+            return True, self._event
+
+    def _finish(self, result: dict[str, np.ndarray]) -> bool:
+        won, event = self._finish_quiet(result)
+        if event is not None:
+            event.set()
+        return won
+
+    def _fail(self, err: BaseException) -> bool:
+        with self._lock:
+            if self._completed:
+                return False
+            self._error = err
+            self._completed = True
+            if self._event is not None:
+                self._event.set()
+            return True
+
+
+class _AppQueue:
+    """One app's bounded FIFO + fairness/shed accounting."""
+
+    __slots__ = ("app", "q", "weight", "credit", "shed", "batches",
+                 "served")
+
+    def __init__(self, app: CompiledApp, weight: float = 1.0):
+        self.app = app
+        self.q: deque[StreamRequest] = deque()
+        self.weight = weight
+        self.credit = weight
+        self.shed = 0            # admissions rejected (QueueFullError)
+        self.batches = 0         # batches formed for this app
+        self.served = 0          # requests taken into batches
 
 
 class StreamEngine:
@@ -98,23 +225,25 @@ class StreamEngine:
             results = [h.result() for h in handles]
             print(eng.report())
 
-    ``max_queue`` is the FIFO depth of the request queue (the
-    backpressure bound), ``max_batch`` the micro-batch width,
+    ``max_queue`` is the FIFO depth of each *per-app* request queue
+    (the backpressure bound; ``max_pending`` optionally bounds the
+    total across apps), ``max_batch`` the micro-batch width cap,
     ``inflight`` the number of outstanding kernel launches (2 ==
-    double buffering).  ``replicas=k`` shards every padded micro-batch
-    across k devices — the batch-parallel farm: each device runs one
-    full pipeline replica on ``max_batch/k`` rows, and the report shows
-    measured per-replica throughput next to the model's predicted
-    linear scaling.  Extra keyword arguments are forwarded to
+    double buffering).  ``latency_budget`` (seconds) bounds how long
+    a request may wait for its batch to fill; when ``None`` the
+    budget adapts from the measured per-batch service time, seeded by
+    ``linger``.  ``app_weights`` maps graph names to fairness weights
+    for the deficit round-robin batch former (default 1.0 each).
+    ``replicas=k`` shards every padded micro-batch across k devices —
+    the batch-parallel farm: each device runs one full pipeline
+    replica on ``batch/k`` rows, and the report shows measured
+    per-replica throughput next to the model's predicted linear
+    scaling.  Extra keyword arguments are forwarded to
     :func:`repro.core.compiler.compile_graph` on cache misses —
     notably ``tune="auto"`` (plus an optional ``tune_cache=``), which
-    makes the engine serve every topology at its *measured* schedule:
-    the first submit of an app either loads the persistent
-    :class:`~repro.tune.store.TuningCache` or runs the profile-guided
-    search once, and all later submits reuse the tuned compiled app
-    through the :class:`~repro.runtime.cache.CompileCache` — serving
-    warm-starts at the tuned operating point with zero per-request
-    measurement.  ``report()`` carries each app's tile provenance
+    makes the engine serve every topology at its *measured* schedule
+    through the :class:`~repro.runtime.cache.CompileCache`;
+    ``report()`` carries each app's tile provenance
     (``model`` / ``measured`` / ``cache``) so an operator can tell
     which regime a serving schedule came from.
     """
@@ -125,23 +254,49 @@ class StreamEngine:
                  cache: CompileCache | None = None,
                  telemetry: Telemetry | None = None,
                  poll_interval: float = 0.005, linger: float = 0.002,
+                 latency_budget: float | None = None,
+                 bucket_pad: bool = True,
+                 app_weights: Mapping[str, float] | None = None,
+                 max_pending: int | None = None,
                  autostart: bool = True, **compile_kwargs: Any):
         self.backend = backend
         self.max_queue = max_queue
         self.max_batch = max_batch
+        self.max_pending = max_pending
         self.replicas = replicas
+        self.latency_budget = latency_budget
         self.cache = cache or CompileCache()
         self.telemetry = telemetry or Telemetry()
         self.telemetry.replicas = replicas
         self._compile_kwargs = compile_kwargs
-        self._queue: _queue.Queue[StreamRequest] = _queue.Queue(max_queue)
-        self._carry: deque[StreamRequest] = deque()
+        self._bucket_pad = bucket_pad
+        self._weights: dict[str, float] = dict(app_weights or {})
+        self._cond = threading.Condition()
+        self._queues: dict[str, _AppQueue] = {}     # sig -> app queue
+        self._rr: deque[str] = deque()              # round-robin order
+        self._pending = 0                           # queued across apps
         self._pool = SlotPool(inflight)
+        # staging_depth must EXCEED inflight: a batch is staged before
+        # the oldest slot is retired, so `inflight` launches can be
+        # unforced while the next one stages — and on CPU a jit call
+        # zero-copy aliases the numpy staging buffer, so rewriting a
+        # rotation corrupts any in-flight batch still reading it
         self._batcher = MicroBatcher(max_batch=max_batch, donate=donate,
-                                     replicas=replicas)
+                                     replicas=replicas,
+                                     staging_depth=inflight + 1)
         self._apps: dict[str, CompiledApp] = {}
+        self._io_specs: dict[str, list[tuple[str, tuple]]] = {}
+        self._form_obs: dict[str, Any] = {}   # worker-only scratch
+        # telemetry is flushed in bulk — per-metric lock round-trips
+        # on the hot path cost as much as a small batch's kernel
+        self._obs: list = []
+        self._obs_lock = threading.Lock()
+        self._sub_count = 0
+        self._sub_depths: list[int] = []
+        self._service_ewma: float | None = None  # worker-local copy
         self._poll = poll_interval
-        self._linger = linger
+        self._linger = linger                       # adaptive-budget seed
+        self._form_wait = poll_interval             # next formation deadline
         self._stop = threading.Event()
         self._thread: threading.Thread | None = None
         if autostart:
@@ -157,10 +312,10 @@ class StreamEngine:
 
         ``graph`` may be a raw (even non-canonical) graph — it is
         compiled through the cache on this thread — or an already
-        compiled app.  When the bounded queue is full, ``submit``
+        compiled app.  When the app's bounded queue is full, ``submit``
         blocks (bounded by ``timeout``) or, with ``block=False``,
-        raises :class:`QueueFullError`: the FIFO backpressure of the
-        simulator, live.
+        raises :class:`QueueFullError` — admission control sheds load
+        for THIS app only; other apps keep their own headroom.
         """
         if self._stop.is_set():
             raise RuntimeError("engine is closed")
@@ -169,26 +324,59 @@ class StreamEngine:
         else:
             app = self.cache.get(graph, backend=self.backend,
                                  **self._compile_kwargs)
-        self._apps.setdefault(app.signature(), app)
+        sig = app.signature()
         # validate on admission: a malformed request must fail ITS
         # submit, not poison the micro-batch it would have joined
-        for ch in app.graph.graph_inputs:
-            if ch.name not in inputs:
-                raise ValueError(f"missing graph input {ch.name!r}")
-            got = tuple(np.shape(inputs[ch.name]))
-            if got != ch.shape:
-                raise ValueError(f"input {ch.name!r}: expected shape "
-                                 f"{ch.shape}, got {got}")
+        # (the per-app (name, shape) spec is cached — the graph is
+        # frozen once compiled)
+        specs = self._io_specs.get(sig)
+        if specs is None:
+            self._apps.setdefault(sig, app)
+            specs = [(ch.name, tuple(ch.shape))
+                     for ch in app.graph.graph_inputs]
+            self._io_specs[sig] = specs
+        for name, shape in specs:
+            if name not in inputs:
+                raise ValueError(f"missing graph input {name!r}")
+            got = getattr(inputs[name], "shape", None)
+            if got != shape and tuple(np.shape(inputs[name])) != shape:
+                raise ValueError(f"input {name!r}: expected shape "
+                                 f"{shape}, got "
+                                 f"{tuple(np.shape(inputs[name]))}")
         req = StreamRequest(app, inputs)
-        depth = self._queue.qsize()
-        try:
-            self._queue.put(req, block=block, timeout=timeout)
-        except _queue.Full:
-            raise QueueFullError(
-                f"request queue at FIFO depth {self.max_queue}; "
-                f"retry with block=True or raise max_queue") from None
-        # only successful admissions count as submitted
-        self.telemetry.observe_submit(depth)
+        end = None if timeout is None else time.perf_counter() + timeout
+        with self._cond:
+            aq = self._queues.get(sig)
+            if aq is None:
+                aq = _AppQueue(app, self._weights.get(app.graph.name, 1.0))
+                self._queues[sig] = aq
+                self._rr.append(sig)
+            while self._is_full(aq):
+                if not block:
+                    aq.shed += 1
+                    self.telemetry.observe_shed()
+                    raise QueueFullError(
+                        f"app {app.graph.name!r} at FIFO depth "
+                        f"{self.max_queue}; retry with block=True, raise "
+                        f"max_queue, or shed load for this app")
+                remaining = (None if end is None
+                             else end - time.perf_counter())
+                if remaining is not None and remaining <= 0:
+                    aq.shed += 1
+                    self.telemetry.observe_shed()
+                    raise QueueFullError(
+                        f"app {app.graph.name!r} still at FIFO depth "
+                        f"{self.max_queue} after {timeout}s")
+                self._cond.wait(remaining)
+                if self._stop.is_set():
+                    raise RuntimeError("engine is closed")
+            req._release = self._on_cancel
+            aq.q.append(req)
+            self._sub_count += 1
+            if len(self._sub_depths) < 100_000:
+                self._sub_depths.append(self._pending)
+            self._pending += 1
+            self._cond.notify_all()
         if self._stop.is_set() and (self._thread is None
                                     or not self._thread.is_alive()):
             # raced a concurrent close(): the worker is gone and will
@@ -196,8 +384,17 @@ class StreamEngine:
             self._fail_all(RuntimeError("engine closed"))
         return req
 
+    def set_app_weight(self, name: str, weight: float) -> None:
+        """Set the fairness weight for every app named ``name``."""
+        with self._cond:
+            self._weights[name] = weight
+            for aq in self._queues.values():
+                if aq.app.graph.name == name:
+                    aq.weight = weight
+
     def report(self, n_items: int | None = None) -> dict[str, Any]:
         """Measured serving metrics + Fig. 1 model, side by side."""
+        self._flush_obs()
         n = n_items or max(1, self.telemetry.completed)
         modeled: dict[str, Any] = {}
         for sig, app in self._apps.items():
@@ -209,7 +406,19 @@ class StreamEngine:
             modeled[key]["tile_provenance"] = sorted(
                 {g.tile_source for g in app.schedule.groups
                  if g.tile is not None})
-        return self.telemetry.report(cache=self.cache, modeled=modeled)
+        out = self.telemetry.report(cache=self.cache, modeled=modeled)
+        apps: dict[str, Any] = {}
+        with self._cond:
+            for sig, aq in self._queues.items():
+                key = aq.app.graph.name
+                if key in apps:
+                    key = f"{key}@{sig[:6]}"
+                apps[key] = {"weight": aq.weight, "queued": len(aq.q),
+                             "batches": aq.batches, "served": aq.served,
+                             "shed": aq.shed}
+        out["apps"] = apps
+        out["buckets"] = dict(self._batcher.bucket_launches)
+        return out
 
     # ------------------------------------------------------------------
     # lifecycle
@@ -225,6 +434,8 @@ class StreamEngine:
     def close(self, wait: bool = True) -> None:
         """Stop accepting requests; drain everything already queued."""
         self._stop.set()
+        with self._cond:
+            self._cond.notify_all()
         if wait and self._thread is not None and self._thread.is_alive():
             self._thread.join()
         if wait:
@@ -238,97 +449,250 @@ class StreamEngine:
         self.close()
 
     # ------------------------------------------------------------------
-    # worker side
+    # worker side: reap → form → dispatch, continuously
     # ------------------------------------------------------------------
     def _serve(self) -> None:
         try:
             while True:
-                # only park in a poll sleep when nothing is in flight:
-                # with work outstanding, an empty queue means "retire
-                # now" (useful blocking work), not "sleep"
-                block = not self._pool.active and not self._stop.is_set()
-                batch = self._next_batch(block=block)
+                self._reap()                   # free completed slots now
+                batch = self._form_batch()
                 if batch:
                     self._dispatch(batch)
-                elif self._pool.active:
+                    continue
+                if self._pool.active and (self._pending == 0
+                                          or self._stop.is_set()
+                                          or not self._pool.free_slots()):
+                    # nothing formable: finishing in-flight work is the
+                    # only useful blocking thing left to do
                     self._retire(self._pool.oldest())
-                elif (self._stop.is_set() and self._queue.empty()
-                        and not self._carry):
+                    continue
+                if (self._stop.is_set() and self._pending == 0
+                        and not self._pool.active):
                     break
+                self._flush_obs()      # idle: sync deferred telemetry
+                self._wait_for_work()
         except BaseException as e:  # worker must never die silently
             self._fail_all(e)
             raise
+        finally:
+            self._flush_obs()
 
-    def _take(self, timeout: float | None) -> StreamRequest | None:
-        if self._carry:
-            return self._carry.popleft()
-        try:
-            if timeout is None:
-                return self._queue.get_nowait()
-            return self._queue.get(timeout=timeout)
-        except _queue.Empty:
-            return None
+    def _flush_obs(self) -> None:
+        """Push buffered hot-path observations into shared telemetry.
 
-    def _next_batch(self, block: bool = True) -> list[StreamRequest]:
-        """Take up to ``max_batch`` same-signature requests.
-
-        FIFO order is preserved: the first request with a different
-        signature ends the batch and is carried into the next one.  A
-        short ``linger`` window lets an underfull batch wait for
-        arrivals (classic micro-batching latency/throughput trade);
-        draining (engine closed) skips it.
+        The worker buffers per-batch/per-submit observations locally
+        (see ``_obs``) and flushes when idle, on backlog, and on
+        shutdown; ``report()`` flushes too, so readers always see
+        current numbers.  Safe from any thread.
         """
-        first = self._take(self._poll if block else None)
-        if first is None:
-            return []
-        batch = [first]
-        sig = first.app.signature()
-        deadline = (time.perf_counter() + self._linger
-                    if not self._stop.is_set() else 0.0)
-        while len(batch) < self.max_batch:
-            wait = deadline - time.perf_counter()
-            nxt = self._take(wait if wait > 0 else None)
-            if nxt is None:
-                break
-            if nxt.app.signature() != sig:
-                self._carry.append(nxt)
-                break
-            batch.append(nxt)
+        with self._obs_lock:
+            entries, self._obs = self._obs, []
+        if entries:
+            self.telemetry.observe_batches(entries)
+        with self._cond:
+            count, self._sub_count = self._sub_count, 0
+            depths, self._sub_depths = self._sub_depths, []
+        if count:
+            self.telemetry.observe_submits(count, depths)
+
+    def _is_full(self, aq: _AppQueue) -> bool:
+        return (len(aq.q) >= self.max_queue
+                or (self.max_pending is not None
+                    and self._pending >= self.max_pending))
+
+    def _form_budget(self) -> float:
+        """Max time a request may wait for its batch to fill (seconds).
+
+        Explicit ``latency_budget`` wins; otherwise adapt to a
+        fraction of the observed per-batch service time — batching is
+        only worth delaying a request for when the batch it joins
+        amortizes more than that delay.
+        """
+        if self.latency_budget is not None:
+            return self.latency_budget
+        s = self._service_ewma          # worker-local: no lock on this path
+        if s is None:
+            return self._linger
+        return min(max(_BUDGET_FRACTION * s, _BUDGET_MIN_S), _BUDGET_MAX_S)
+
+    def _pick_app(self) -> _AppQueue | None:
+        """Deficit-weighted round-robin over apps with queued work.
+
+        Called under ``_cond``.  Each selection costs one credit;
+        credits replenish by ``weight`` when no queued app can pay,
+        so an app with weight w forms w batches per replenish cycle
+        and every queued app is visited each cycle (no starvation).
+        """
+        live = [s for s in self._rr if self._queues[s].q]
+        if not live:
+            return None
+        if len(live) == 1:                    # single-tenant fast path
+            return self._queues[live[0]]
+        for _round in range(2):
+            for _ in range(len(self._rr)):
+                sig = self._rr[0]
+                self._rr.rotate(-1)
+                aq = self._queues[sig]
+                if aq.q and aq.credit >= 1.0:
+                    return aq
+            for q in self._queues.values():   # weighted replenish
+                q.credit = min(q.credit + q.weight, max(q.weight, 1.0))
+        return self._queues[live[0]]          # weight<=0 guard: plain FIFO
+
+    def _form_batch(self) -> list[StreamRequest]:
+        """Deadline-based batch formation (the continuous-batching core).
+
+        Close a batch when it is full, the engine is draining, the
+        oldest request has spent its formation budget, or the device
+        is idle (work-conserving: never hold work back when there is
+        nothing to overlap it with).  Otherwise leave the batch *open*
+        — arriving same-app requests keep joining it — and tell the
+        worker when the deadline lands.
+        """
+        now = time.perf_counter()
+        with self._cond:
+            aq = self._pick_app()
+            if aq is None:
+                self._form_wait = self._poll
+                return []
+            budget = self._form_budget()
+            oldest_age = now - aq.q[0].t_submit
+            if not (len(aq.q) >= self.max_batch or self._stop.is_set()
+                    or oldest_age >= budget or self._pool.active == 0):
+                self._form_wait = max(1e-5, budget - oldest_age)
+                return []
+            aq.credit = max(0.0, aq.credit - 1.0)
+            batch: list[StreamRequest] = []
+            while aq.q and len(batch) < self.max_batch:
+                r = aq.q.popleft()
+                self._pending -= 1
+                if r.done():         # cancelled while queued (lost race)
+                    continue
+                r.t_taken = now
+                batch.append(r)
+            if batch:
+                aq.batches += 1
+                aq.served += len(batch)
+            self._cond.notify_all()  # queue space freed: wake submitters
+        if batch:
+            # stashed for _dispatch to merge into ONE telemetry update
+            # per batch (worker-thread-only scratch, no race)
+            self._form_obs = {
+                "queue_wait": [r.t_taken - r.t_submit for r in batch],
+                "form": now - batch[0].t_submit,
+            }
         return batch
 
     def _dispatch(self, batch: list[StreamRequest]) -> None:
         app = batch[0].app
+        timings: dict[str, float] = {}
         try:
-            # pad to the fixed batch width: every launch of this app
-            # reuses one compiled kernel shape (no ragged re-tracing)
-            outs = self._batcher.launch(app, batch, pad_to=self.max_batch)
+            # pad to the power-of-two bucket (or the fixed max_batch
+            # width with bucket_pad=False): a 2-request batch launches
+            # a 2-wide kernel, not a 32-wide one
+            outs = self._batcher.launch(
+                app, batch,
+                pad_to=None if self._bucket_pad else self.max_batch,
+                timings=timings, check_shapes=False)
         except BaseException as e:
             for r in batch:
                 r._fail(e)
             return
-        self.telemetry.observe_batch(len(batch))
+        t_disp = time.perf_counter()
+        self._form_obs.update(timings)
+        with self._obs_lock:
+            self._obs.append((t_disp, len(batch), self._form_obs,
+                              None, None))
+        self._form_obs = {}
         if not self._pool.free_slots():
-            self._retire(self._pool.oldest())         # double-buffer rotate
-        self._pool.submit((batch, outs))
+            self._retire(self._pool.oldest())     # rotate: block on oldest
+        self._pool.submit((batch, outs, t_disp))
         self._pool.admit()
+
+    def _reap(self) -> None:
+        """Retire every in-flight slot whose outputs already landed.
+
+        Non-blocking: readiness is probed via the arrays' ``is_ready``
+        (host arrays count as ready).  This is what keeps the slot
+        pool continuously refilled instead of draining at a barrier.
+        """
+        if not self._pool.active:
+            return
+
+        def _is_ready(item: Any) -> bool:
+            _batch, outs, _t = item
+            return all(o.is_ready() for o in outs.values()
+                       if hasattr(o, "is_ready"))
+
+        for slot in self._pool.ready(_is_ready):
+            self._retire(slot)
 
     def _retire(self, slot: int | None) -> None:
         if slot is None:
             return
-        batch, outs = self._pool.retire(slot)
+        batch, outs, t_disp = self._pool.retire(slot)
+        t0 = time.perf_counter()
         host = {k: np.asarray(v) for k, v in outs.items()}  # blocks here
         now = time.perf_counter()
+        # claim completions quietly, record them, THEN wake waiters —
+        # a caller that wakes from result() and immediately reads
+        # report() must see its own completion.  Requests whose claim
+        # lost to cancel() have their computed row discarded.
+        done: list[float] = []
+        wake: list[threading.Event] = []
         for i, req in enumerate(batch):
-            req._finish({k: v[i] for k, v in host.items()})
-            self.telemetry.observe_completion(now - req.t_submit)
+            won, event = req._finish_quiet(
+                {k: v[i] for k, v in host.items()})
+            if won:
+                done.append(now - req.t_submit)
+            if event is not None:
+                wake.append(event)
+        svc = now - t_disp
+        prev = self._service_ewma
+        self._service_ewma = (svc if prev is None else
+                              _SERVICE_ALPHA * svc
+                              + (1.0 - _SERVICE_ALPHA) * prev)
+        with self._obs_lock:
+            self._obs.append((now, None, {"readback": now - t0},
+                              done, svc))
+            backlog = len(self._obs)
+        for event in wake:
+            event.set()
+        if backlog >= 64:
+            self._flush_obs()
+
+    def _wait_for_work(self) -> None:
+        """Park until new work arrives or the formation deadline lands."""
+        with self._cond:
+            if self._stop.is_set() and self._pending:
+                return
+            self._cond.wait(min(self._form_wait, self._poll))
+        self._form_wait = self._poll
+
+    def _on_cancel(self, req: StreamRequest) -> None:
+        """Cancel hook: free the queue slot a cancelled request holds."""
+        self.telemetry.observe_cancel()
+        with self._cond:
+            aq = self._queues.get(req.app.signature())
+            if aq is None:
+                return
+            try:
+                aq.q.remove(req)
+            except ValueError:
+                return               # already taken into a batch
+            self._pending -= 1
+            self._cond.notify_all()  # its queue slot is free right now
 
     def _fail_all(self, err: BaseException) -> None:
-        while True:
-            req = self._take(None)
-            if req is None:
-                break
-            req._fail(err)
+        with self._cond:
+            doomed = [r for aq in self._queues.values() for r in aq.q]
+            for aq in self._queues.values():
+                aq.q.clear()
+            self._pending = 0
+            self._cond.notify_all()
+        for r in doomed:
+            r._fail(err)
         while self._pool.active:
-            batch, _ = self._pool.retire(self._pool.oldest())
-            for req in batch:
-                req._fail(err)
+            batch, _outs, _t = self._pool.retire(self._pool.oldest())
+            for r in batch:
+                r._fail(err)

@@ -16,7 +16,7 @@ admission, admission-order retirement bookkeeping.
 from __future__ import annotations
 
 from collections import deque
-from typing import Any
+from typing import Any, Callable
 
 __all__ = ["SlotPool"]
 
@@ -66,6 +66,18 @@ class SlotPool:
     def oldest(self) -> int | None:
         """Slot id of the earliest-admitted busy slot (FIFO retire order)."""
         return self._order[0] if self._order else None
+
+    def ready(self, is_ready: Callable[[Any], bool]) -> list[int]:
+        """Busy slots (admission order) whose item can retire *now*.
+
+        The continuous-batching schedulers use this to refill freed
+        slots as items complete instead of draining the whole pool at
+        a barrier: the engine polls in-flight launches with a
+        non-blocking readiness probe, the LM batcher retires finished
+        sequences, and in both cases ``admit()`` immediately backfills
+        the freed slots from the queue.
+        """
+        return [s for s in self._order if is_ready(self.slots[s])]
 
     # -- retirement ----------------------------------------------------
     def retire(self, slot: int) -> Any:

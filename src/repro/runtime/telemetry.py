@@ -20,10 +20,20 @@ import numpy as np
 
 from repro.core.simulate import TaskTiming, analytic_latency, simulate_pipeline
 
-__all__ = ["Telemetry", "modeled_latency"]
+__all__ = ["PHASES", "Telemetry", "modeled_latency"]
+
+#: the submit→complete hot path, phase by phase: time spent queued
+#: before being taken into a batch, waiting for the batch to form,
+#: staging rows into the pinned batch buffers, dispatching the kernel,
+#: and forcing outputs back to host memory
+PHASES = ("queue_wait", "form", "stack", "launch", "readback")
 
 #: cap on per-request samples kept in memory (reservoir of latest)
 _MAX_SAMPLES = 100_000
+
+#: EWMA smoothing for the observed per-batch service time that drives
+#: the engine's adaptive batch-formation budget
+_SERVICE_ALPHA = 0.2
 
 #: cap on items fed to the O(S*n) discrete simulator in reports
 _SIM_ITEMS_CAP = 512
@@ -74,10 +84,14 @@ class Telemetry:
         self._latencies_s: list[float] = []
         self._queue_depths: list[int] = []
         self._batch_sizes: list[int] = []
+        self._phases_s: dict[str, list[float]] = {p: [] for p in PHASES}
+        self._service_ewma_s: float | None = None
         self._t_first: float | None = None
         self._t_last: float | None = None
         self.completed = 0
         self.submitted = 0
+        self.shed = 0
+        self.cancelled = 0
         #: device-farm width the served throughput is spread over;
         #: owned by the engine (it sets this to its ``replicas``) so
         #: reports show per-replica throughput next to the modeled
@@ -96,6 +110,130 @@ class Telemetry:
             if len(self._batch_sizes) < _MAX_SAMPLES:
                 self._batch_sizes.append(size)
 
+    def observe_phase(self, phase: str, seconds: float) -> None:
+        """Record time spent in one hot-path phase (see :data:`PHASES`)."""
+        with self._lock:
+            samples = self._phases_s.setdefault(phase, [])
+            if len(samples) < _MAX_SAMPLES:
+                samples.append(seconds)
+
+    def observe_service(self, seconds: float) -> None:
+        """Record one batch's dispatch→ready service time (EWMA'd).
+
+        The engine adapts its batch-formation budget from this: a
+        request should never wait longer for stragglers than a
+        fraction of the time the batch will take to execute anyway.
+        """
+        with self._lock:
+            prev = self._service_ewma_s
+            self._service_ewma_s = (seconds if prev is None else
+                                    _SERVICE_ALPHA * seconds
+                                    + (1.0 - _SERVICE_ALPHA) * prev)
+
+    def observe_batch_events(self, *, batch_size: int | None = None,
+                             phases: dict[str, Any] | None = None,
+                             completions: list[float] | None = None,
+                             service_s: float | None = None) -> None:
+        """Record one batch's worth of observations under ONE lock.
+
+        The serve loop's per-batch bookkeeping (batch size, phase
+        durations, per-request completion latencies, service EWMA)
+        previously cost a lock acquisition per metric per request —
+        measurable against sub-100us kernels.  ``phases`` values may
+        be a scalar duration or a list of per-request durations.
+        """
+        now = time.perf_counter()
+        with self._lock:
+            if batch_size is not None \
+                    and len(self._batch_sizes) < _MAX_SAMPLES:
+                self._batch_sizes.append(batch_size)
+            if phases:
+                for p, vals in phases.items():
+                    samples = self._phases_s.setdefault(p, [])
+                    room = _MAX_SAMPLES - len(samples)
+                    if room <= 0:
+                        continue
+                    if isinstance(vals, (int, float)):
+                        samples.append(float(vals))
+                    else:
+                        samples.extend(vals[:room])
+            if completions:
+                if self._t_first is None:
+                    self._t_first = now
+                self._t_last = now
+                self.completed += len(completions)
+                room = _MAX_SAMPLES - len(self._latencies_s)
+                if room > 0:
+                    self._latencies_s.extend(completions[:room])
+            if service_s is not None:
+                prev = self._service_ewma_s
+                self._service_ewma_s = (service_s if prev is None else
+                                        _SERVICE_ALPHA * service_s
+                                        + (1.0 - _SERVICE_ALPHA) * prev)
+
+    def observe_batches(self, entries: list) -> None:
+        """Bulk-ingest buffered per-batch observations under ONE lock.
+
+        Each entry is ``(t_observed, batch_size, phases, completions,
+        service_s)`` with the same semantics as
+        :meth:`observe_batch_events`; ``t_observed`` preserves the
+        original wall-clock of the observation so throughput spans
+        stay correct under deferred flushing.
+        """
+        with self._lock:
+            for now, batch_size, phases, completions, service_s in entries:
+                if batch_size is not None \
+                        and len(self._batch_sizes) < _MAX_SAMPLES:
+                    self._batch_sizes.append(batch_size)
+                if phases:
+                    for p, vals in phases.items():
+                        samples = self._phases_s.setdefault(p, [])
+                        room = _MAX_SAMPLES - len(samples)
+                        if room <= 0:
+                            continue
+                        if isinstance(vals, (int, float)):
+                            samples.append(float(vals))
+                        else:
+                            samples.extend(vals[:room])
+                if completions:
+                    if self._t_first is None:
+                        self._t_first = now
+                    self._t_last = now
+                    self.completed += len(completions)
+                    room = _MAX_SAMPLES - len(self._latencies_s)
+                    if room > 0:
+                        self._latencies_s.extend(completions[:room])
+                if service_s is not None:
+                    prev = self._service_ewma_s
+                    self._service_ewma_s = (
+                        service_s if prev is None else
+                        _SERVICE_ALPHA * service_s
+                        + (1.0 - _SERVICE_ALPHA) * prev)
+
+    def observe_submits(self, count: int, queue_depths: list[int]) -> None:
+        """Bulk-ingest buffered submit observations under ONE lock."""
+        with self._lock:
+            self.submitted += count
+            room = _MAX_SAMPLES - len(self._queue_depths)
+            if room > 0:
+                self._queue_depths.extend(queue_depths[:room])
+
+    def observe_shed(self) -> None:
+        """One request rejected by admission control (QueueFullError)."""
+        with self._lock:
+            self.shed += 1
+
+    def observe_cancel(self) -> None:
+        """One request abandoned by its caller before completion."""
+        with self._lock:
+            self.cancelled += 1
+
+    @property
+    def service_ewma_s(self) -> float | None:
+        """Smoothed per-batch service time, or None before any batch."""
+        with self._lock:
+            return self._service_ewma_s
+
     def observe_completion(self, latency_s: float) -> None:
         now = time.perf_counter()
         with self._lock:
@@ -106,12 +244,29 @@ class Telemetry:
             if len(self._latencies_s) < _MAX_SAMPLES:
                 self._latencies_s.append(latency_s)
 
+    def reset(self) -> None:
+        """Zero all samples and counters (keeps ``replicas``).
+
+        Lets a benchmark or operator mark the start of a measurement
+        window after warmup — compile latencies from first-launch
+        bucket warming would otherwise dominate small-sample p99s.
+        """
+        with self._lock:
+            self._latencies_s.clear()
+            self._queue_depths.clear()
+            self._batch_sizes.clear()
+            self._phases_s = {p: [] for p in PHASES}
+            self._service_ewma_s = None
+            self._t_first = self._t_last = None
+            self.completed = self.submitted = 0
+            self.shed = self.cancelled = 0
+
     # -- aggregation ---------------------------------------------------
     @staticmethod
     def _pct(xs: list[float], q: float) -> float:
         return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
 
-    def snapshot(self) -> dict[str, float]:
+    def snapshot(self) -> dict[str, Any]:
         """Measured serving metrics so far."""
         with self._lock:
             lat = list(self._latencies_s)
@@ -119,9 +274,19 @@ class Telemetry:
                     if (self._t_first is not None and self.completed > 1)
                     else 0.0)
             tput = (self.completed - 1) / span if span else 0.0
+            phases = {
+                p: {"mean_ms": float(np.mean(xs)) * 1e3,
+                    "p99_ms": self._pct(xs, 99) * 1e3,
+                    "count": len(xs)}
+                for p, xs in self._phases_s.items() if xs
+            }
             return {
                 "submitted": self.submitted,
                 "completed": self.completed,
+                "shed": self.shed,
+                "cancelled": self.cancelled,
+                "service_ewma_ms": ((self._service_ewma_s or 0.0) * 1e3),
+                "phases": phases,
                 "throughput_rps": tput,
                 "replicas": self.replicas,
                 "throughput_per_replica_rps": tput / self.replicas,

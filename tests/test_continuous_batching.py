@@ -1,0 +1,410 @@
+"""Continuous-batching engine: formation, fairness, cancel, buckets.
+
+The submit→dispatch→complete hot path rebuilt around continuous
+batching (per-app admission, deficit-weighted round-robin formation,
+power-of-two bucketed padding, staged zero-copy launch, cancel
+without leaking queue slots).  Everything here runs on the ``xla``
+backend at small plane sizes so the suite stays fast; bit-exactness
+is always against ``reference_eval``.
+"""
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import DataflowGraph, compile_graph
+from repro.core.apps import JACOBI3, LAPLACE3, _conv
+from repro.runtime import (PHASES, CancelledError, CompileCache,
+                           MicroBatcher, QueueFullError, StreamEngine,
+                           Telemetry)
+from repro.runtime.engine import _BUDGET_MAX_S, _BUDGET_MIN_S
+
+
+def _diamond(h=8, w=128, name="diamond"):
+    g = DataflowGraph(name)
+    x = g.input("x", (h, w))
+    s1 = g.stencil(x, (3, 3), _conv(LAPLACE3), name="lap")
+    s2 = g.stencil(x, (3, 3), _conv(JACOBI3), name="jac")
+    g.output(g.point2(s1, s2, lambda u, v: u - v, name="merge"), "y")
+    return g
+
+
+def _pointwise(h=8, w=128, name="act"):
+    """A second topology (different signature than the diamond)."""
+    g = DataflowGraph(name)
+    x = g.input("x", (h, w))
+    g.output(g.point(x, lambda v: jnp.tanh(v) * 1.5, name="tanh"), "y")
+    return g
+
+
+class _Req:
+    def __init__(self, x):
+        self.inputs = {"x": x}
+
+
+# ----------------------------------------------------------------------
+# bucketed pad widths
+# ----------------------------------------------------------------------
+def test_bucket_is_next_pow2_capped_at_max_batch():
+    mb = MicroBatcher(max_batch=8)
+    assert [mb.bucket(n) for n in (1, 2, 3, 4, 5, 7, 8)] \
+        == [1, 2, 4, 4, 8, 8, 8]
+    with pytest.raises(ValueError):
+        mb.bucket(0)
+    # the cap wins over the power of two
+    assert MicroBatcher(max_batch=6).bucket(5) == 6
+
+
+def test_launch_pads_to_bucket_and_counts_it(rng):
+    app = compile_graph(_diamond(), backend="xla")
+    mb = MicroBatcher(max_batch=8)
+    reqs = [_Req(rng.normal(size=(8, 128)).astype(np.float32))
+            for _ in range(5)]
+    y3 = np.asarray(mb.launch(app, reqs[:3])["y"])
+    y5 = np.asarray(mb.launch(app, reqs)["y"])
+    # a 3-request batch launches a 4-wide kernel, not max_batch-wide
+    assert y3.shape[0] == 4 and y5.shape[0] == 8
+    assert mb.bucket_launches == {4: 1, 8: 1}
+    for i, r in enumerate(reqs):
+        np.testing.assert_array_equal(
+            y5[i], np.asarray(app(x=r.inputs["x"])["y"]))
+
+
+def test_staging_buffers_are_reused_and_stay_bit_exact(rng):
+    """Rows stage into pinned buffers rotated ``staging_depth`` deep:
+    the same arrays come back every depth launches, and repeated
+    rotation never corrupts results."""
+    app = compile_graph(_diamond(), backend="xla")
+    mb = MicroBatcher(max_batch=4, staging_depth=2)
+    ids = []
+    for _ in range(6):
+        reqs = [_Req(rng.normal(size=(8, 128)).astype(np.float32))
+                for _ in range(4)]
+        y = np.asarray(mb.launch(app, reqs)["y"])
+        for i, r in enumerate(reqs):
+            np.testing.assert_array_equal(
+                y[i], np.asarray(app(x=r.inputs["x"])["y"]))
+        ids.append(id(mb._staging[(app.signature(), 4)][0][0]))
+    # one allocation, not one per batch
+    assert len(set(ids)) == 1
+    assert mb.bucket_launches == {4: 6}
+
+
+# ----------------------------------------------------------------------
+# cancellation: a timed-out caller can abandon without leaking capacity
+# ----------------------------------------------------------------------
+def test_cancel_frees_queue_slot_immediately(rng):
+    g = _diamond()
+    x = rng.normal(size=(8, 128)).astype(np.float32)
+    eng = StreamEngine(backend="xla", max_queue=2, max_batch=2,
+                       autostart=False)
+    try:
+        h1 = eng.submit(g, {"x": x}, block=False)
+        h2 = eng.submit(g, {"x": x}, block=False)
+        with pytest.raises(QueueFullError):
+            eng.submit(g, {"x": x}, block=False)
+        assert h1.cancel() is True
+        # the cancelled request's slot is free right now, no drain needed
+        h3 = eng.submit(g, {"x": x}, block=False)
+        assert h1.cancelled()
+        with pytest.raises(CancelledError):
+            h1.result()
+        assert h1.cancel() is False          # already completed
+        eng.start()
+        np.testing.assert_array_equal(h2.result(timeout=120)["y"],
+                                      h3.result(timeout=120)["y"])
+        m = eng.report()["measured"]
+        assert m["cancelled"] == 1 and m["completed"] == 2
+    finally:
+        eng.close()
+
+
+def test_result_timeout_then_cancel(rng):
+    g = _diamond()
+    x = rng.normal(size=(8, 128)).astype(np.float32)
+    eng = StreamEngine(backend="xla", autostart=False)   # never serves
+    try:
+        h = eng.submit(g, {"x": x})
+        with pytest.raises(TimeoutError):
+            h.result(timeout=0.05)
+        assert not h.done()
+        assert h.cancel() is True
+        with pytest.raises(CancelledError):
+            h.result(timeout=1)
+        assert isinstance(h.exception(), CancelledError)
+    finally:
+        eng.close()
+
+
+def test_cancel_of_inflight_request_discards_its_row(rng):
+    """Cancelling after the batch was formed (white-box: drive the
+    worker steps by hand): the computed row is discarded at
+    retirement, the cancel wins, and neighbours are unaffected."""
+    g = _diamond()
+    frames = [rng.normal(size=(8, 128)).astype(np.float32)
+              for _ in range(2)]
+    eng = StreamEngine(backend="xla", max_batch=2, autostart=False)
+    try:
+        handles = [eng.submit(g, {"x": f}) for f in frames]
+        batch = eng._form_batch()
+        assert len(batch) == 2               # both taken into the batch
+        assert handles[1].cancel() is True   # in flight, not yet retired
+        eng._dispatch(batch)
+        eng._retire(eng._pool.oldest())
+        ref_graph = eng.cache.get(g, backend="xla").schedule.graph
+        np.testing.assert_array_equal(
+            handles[0].result(timeout=1)["y"],
+            np.asarray(ref_graph.reference_eval({"x": frames[0]})["y"]))
+        with pytest.raises(CancelledError):
+            handles[1].result(timeout=1)
+        m = eng.report()["measured"]
+        assert m["completed"] == 1           # the discarded row never counts
+        assert m["cancelled"] == 1
+    finally:
+        eng.close(wait=False)
+
+
+# ----------------------------------------------------------------------
+# per-app admission control
+# ----------------------------------------------------------------------
+def test_admission_sheds_per_app_not_globally(rng):
+    """One hot app saturating its FIFO cannot reject the other app."""
+    hot, cold = _diamond(name="hot"), _pointwise(name="cold")
+    x = rng.normal(size=(8, 128)).astype(np.float32)
+    eng = StreamEngine(backend="xla", max_queue=2, autostart=False)
+    try:
+        for _ in range(2):
+            eng.submit(hot, {"x": x}, block=False)
+        with pytest.raises(QueueFullError):
+            eng.submit(hot, {"x": x}, block=False)
+        with pytest.raises(QueueFullError):
+            eng.submit(hot, {"x": x}, timeout=0.01)
+        # the cold app still has its own headroom
+        eng.submit(cold, {"x": x}, block=False)
+        rep = eng.report()
+        assert rep["apps"]["hot"]["shed"] == 2
+        assert rep["apps"]["cold"]["shed"] == 0
+        assert rep["measured"]["shed"] == 2
+    finally:
+        eng.close(wait=False)
+
+
+def test_max_pending_bounds_total_across_apps(rng):
+    hot, cold = _diamond(name="hot"), _pointwise(name="cold")
+    x = rng.normal(size=(8, 128)).astype(np.float32)
+    eng = StreamEngine(backend="xla", max_queue=8, max_pending=2,
+                       autostart=False)
+    try:
+        eng.submit(hot, {"x": x}, block=False)
+        eng.submit(cold, {"x": x}, block=False)
+        with pytest.raises(QueueFullError):
+            eng.submit(cold, {"x": x}, block=False)
+    finally:
+        eng.close(wait=False)
+
+
+# ----------------------------------------------------------------------
+# weighted fairness (white-box: drive _form_batch directly)
+# ----------------------------------------------------------------------
+def test_deficit_weighted_round_robin_formation(rng):
+    hot, cold = _diamond(name="hot"), _pointwise(name="cold")
+    x = rng.normal(size=(8, 128)).astype(np.float32)
+    eng = StreamEngine(backend="xla", max_batch=2, max_queue=64,
+                       app_weights={"hot": 2.0, "cold": 1.0},
+                       autostart=False)
+    try:
+        for _ in range(12):
+            eng.submit(hot, {"x": x})
+        for _ in range(6):
+            eng.submit(cold, {"x": x})
+        formed = []
+        for _ in range(9):
+            batch = eng._form_batch()       # device idle: closes at once
+            assert len(batch) == 2
+            formed.append(batch[0].app.graph.name)
+        # weight 2 : weight 1 == two hot batches per cold batch, and
+        # the cold app is visited every replenish cycle (no starvation)
+        assert formed.count("hot") == 6 and formed.count("cold") == 3
+        assert "cold" in formed[:3]
+        rep = eng.report()
+        assert rep["apps"]["hot"]["batches"] == 6
+        assert rep["apps"]["cold"]["batches"] == 3
+        assert rep["apps"]["hot"]["served"] == 12
+    finally:
+        eng.close(wait=False)
+
+
+def test_set_app_weight_applies_to_live_queue(rng):
+    g = _diamond(name="hot")
+    x = rng.normal(size=(8, 128)).astype(np.float32)
+    eng = StreamEngine(backend="xla", autostart=False)
+    try:
+        eng.submit(g, {"x": x})
+        eng.set_app_weight("hot", 3.0)
+        assert eng.report()["apps"]["hot"]["weight"] == 3.0
+    finally:
+        eng.close(wait=False)
+
+
+# ----------------------------------------------------------------------
+# deadline-based formation budget
+# ----------------------------------------------------------------------
+def test_form_budget_adapts_and_clamps(rng):
+    eng = StreamEngine(backend="xla", linger=0.002, autostart=False)
+    try:
+        assert eng._form_budget() == 0.002          # seeded by linger
+        eng._service_ewma = 0.01                    # 10 ms batches
+        assert eng._form_budget() == pytest.approx(0.005)
+        eng._service_ewma = 10.0
+        assert eng._form_budget() == _BUDGET_MAX_S  # clamped above
+        eng._service_ewma = 1e-9
+        assert eng._form_budget() == _BUDGET_MIN_S  # clamped below
+    finally:
+        eng.close(wait=False)
+    eng = StreamEngine(backend="xla", latency_budget=0.5, autostart=False)
+    try:
+        eng._service_ewma = 1e-9
+        assert eng._form_budget() == 0.5            # explicit budget wins
+    finally:
+        eng.close(wait=False)
+
+
+def test_formation_is_work_conserving_when_idle(rng):
+    """With the device idle, one queued request dispatches immediately
+    instead of lingering for batch-mates."""
+    g = _diamond()
+    x = rng.normal(size=(8, 128)).astype(np.float32)
+    eng = StreamEngine(backend="xla", max_batch=8, latency_budget=10.0,
+                       autostart=False)
+    try:
+        eng.submit(g, {"x": x})
+        t0 = time.perf_counter()
+        batch = eng._form_batch()
+        assert len(batch) == 1                       # closed, not held
+        assert time.perf_counter() - t0 < 1.0        # and without waiting
+    finally:
+        eng.close(wait=False)
+
+
+# ----------------------------------------------------------------------
+# shutdown and mixed-signature streams
+# ----------------------------------------------------------------------
+def test_close_drains_inflight_without_drops(rng):
+    """close() right after a burst: every request completes exactly
+    once, bit-exact — nothing is dropped or double-finished."""
+    n = 24
+    g = _diamond()
+    frames = [rng.normal(size=(8, 128)).astype(np.float32)
+              for _ in range(n)]
+    eng = StreamEngine(backend="xla", max_batch=4, max_queue=64)
+    handles = [eng.submit(g, {"x": f}) for f in frames]
+    eng.close(wait=True)                   # drains queued + in-flight
+    results = [h.result(timeout=1) for h in handles]   # all already done
+    ref_graph = eng.cache.get(g, backend="xla").schedule.graph
+    for f, r in zip(frames, results):
+        np.testing.assert_array_equal(
+            r["y"], np.asarray(ref_graph.reference_eval({"x": f})["y"]))
+    m = eng.report()["measured"]
+    assert m["completed"] == n and m["submitted"] == n
+    with pytest.raises(RuntimeError):
+        eng.submit(g, {"x": frames[0]})
+
+
+def test_mixed_signature_interleaved_bit_exact(rng):
+    """Two topologies interleaved 1:1: batches stay same-signature
+    (results are bit-exact per app) and both apps are served."""
+    n = 16
+    ga, gb = _diamond(name="a"), _pointwise(name="b")
+    fa = [rng.normal(size=(8, 128)).astype(np.float32) for _ in range(n)]
+    fb = [rng.normal(size=(8, 128)).astype(np.float32) for _ in range(n)]
+    with StreamEngine(backend="xla", max_batch=4, max_queue=64) as eng:
+        handles = []
+        for xa, xb in zip(fa, fb):
+            handles.append(("a", xa, eng.submit(ga, {"x": xa})))
+            handles.append(("b", xb, eng.submit(gb, {"x": xb})))
+        results = [(k, x, h.result(timeout=120)) for k, x, h in handles]
+        rep = eng.report()
+    refs = {"a": eng.cache.get(ga, backend="xla").schedule.graph,
+            "b": eng.cache.get(gb, backend="xla").schedule.graph}
+    for k, x, r in results:
+        np.testing.assert_array_equal(
+            r["y"], np.asarray(refs[k].reference_eval({"x": x})["y"]))
+    assert rep["apps"]["a"]["served"] == n
+    assert rep["apps"]["b"]["served"] == n
+    assert rep["cache"]["misses"] == 2     # one compile per topology
+
+
+# ----------------------------------------------------------------------
+# cache hit accounting is per compile event
+# ----------------------------------------------------------------------
+def test_cache_hit_rate_counts_compile_events_not_requests():
+    """N fresh structurally identical graphs: 1 miss + N-1 hits; then
+    re-serving the SAME objects moves `requests` only, so a serving
+    stream cannot inflate hit_rate."""
+    cache = CompileCache()
+    graphs = [_diamond(name=f"g{i}") for i in range(5)]
+    apps = [cache.get(g, backend="xla") for g in graphs]
+    assert all(a is apps[0] for a in apps)
+    assert cache.stats.misses == 1 and cache.stats.hits == 4
+    assert cache.stats.hit_rate == pytest.approx(4 / 5)
+    for _ in range(3):                      # a 15-request serving stream
+        for g in graphs:
+            cache.get(g, backend="xla")
+    assert cache.stats.requests == 20
+    assert cache.stats.misses == 1 and cache.stats.hits == 4
+    assert cache.stats.hit_rate == pytest.approx(4 / 5)   # unchanged
+    d = cache.stats.as_dict()
+    assert d["requests"] == 20 and d["hit_rate"] == pytest.approx(0.8)
+
+
+# ----------------------------------------------------------------------
+# telemetry: per-phase breakdown + bulk ingest + reset
+# ----------------------------------------------------------------------
+def test_report_breaks_down_hot_path_phases(rng):
+    n = 16
+    g = _diamond()
+    frames = [rng.normal(size=(8, 128)).astype(np.float32)
+              for _ in range(n)]
+    with StreamEngine(backend="xla", max_batch=4, max_queue=64) as eng:
+        handles = [eng.submit(g, {"x": f}) for f in frames]
+        for h in handles:
+            h.result(timeout=120)
+        rep = eng.report()
+    phases = rep["measured"]["phases"]
+    assert set(PHASES) <= set(phases)
+    assert phases["queue_wait"]["count"] == n    # one sample per request
+    batches = phases["launch"]["count"]
+    assert batches >= 1
+    assert phases["readback"]["count"] == batches
+    for p in PHASES:
+        assert phases[p]["mean_ms"] >= 0.0
+        assert phases[p]["p99_ms"] >= 0.0
+    # every launch was bucket-padded within max_batch
+    assert rep["buckets"] and all(1 <= w <= 4 for w in rep["buckets"])
+    assert sum(rep["buckets"].values()) == batches
+
+
+def test_telemetry_bulk_ingest_and_reset():
+    t = Telemetry()
+    t.replicas = 2
+    now = time.perf_counter()
+    t.observe_batches([
+        (now, 4, {"launch": 1e-3, "queue_wait": [1e-4] * 4},
+         [2e-3] * 4, 5e-3),
+        (now + 0.1, 2, {"launch": 2e-3}, [3e-3] * 2, 4e-3),
+    ])
+    t.observe_submits(6, [0, 1, 2, 3, 4, 5])
+    snap = t.snapshot()
+    assert snap["completed"] == 6 and snap["submitted"] == 6
+    assert snap["batch_size_mean"] == pytest.approx(3.0)
+    assert snap["phases"]["launch"]["count"] == 2
+    assert snap["phases"]["queue_wait"]["count"] == 4
+    assert snap["service_ewma_ms"] > 0
+    assert snap["throughput_rps"] > 0      # span from original stamps
+    t.reset()
+    snap = t.snapshot()
+    assert snap["completed"] == 0 and snap["submitted"] == 0
+    assert snap["phases"] == {} and snap["throughput_rps"] == 0.0
+    assert snap["replicas"] == 2           # reset keeps the farm width
