@@ -47,6 +47,8 @@ def _time_call(fn, reps: int) -> float:
 
 
 def vf_rows(smoke: bool) -> list[dict]:
+    from repro.obs.drift import DriftLog, drift_report
+
     h, w = (96, 256) if smoke else (256, 640)
     reps = 2 if smoke else 5
     rng = np.random.default_rng(0)
@@ -54,6 +56,12 @@ def vf_rows(smoke: bool) -> list[dict]:
 
     sched = build_schedule(build_app(_APP, h, w))
     records = sweep_vector_factor(sched.groups[0])
+    sig = sched.graph.signature()
+    # every (modeled, measured) pair from the sweep goes to the on-disk
+    # drift log; drift_report() over them is the cost model's report
+    # card (rank correlation + bias) — see docs/observability.md
+    drift = DriftLog(os.path.join(_ROOT, "experiments",
+                                  "bench_parallel_drift.jsonl"))
 
     rows = []
     baseline = None
@@ -68,14 +76,22 @@ def vf_rows(smoke: bool) -> list[dict]:
             baseline = out
         assert np.array_equal(out, baseline), f"vf={vf} changed bits"
         us = _time_call(lambda: np.asarray(app(img=x)["out"]), reps)
+        drift.record("vf_sweep", sig, [[h, w]], "pallas",
+                     rec["modeled_s"], us / 1e6, vector_factor=vf,
+                     tile=list(rec["tile"]), app=_APP)
         rows.append({"name": f"parallel_vf{vf}", "us": us,
                      "vector_factor": vf, "tile": rec["tile"],
                      "modeled_us": rec["modeled_s"] * 1e6,
                      "h": h, "w": w, "app": _APP})
+    drift.flush()
+    report = drift_report(drift)
     auto = build_schedule(build_app(_APP, h, w)).groups[0]
     rows.append({"name": "parallel_vf_auto", "us": 0.0,
                  "vector_factor": auto.vector_factor, "tile": auto.tile,
                  "h": h, "w": w, "app": _APP,
+                 "drift_spearman": report["spearman"],
+                 "drift_bias": report["bias"],
+                 "drift_log": drift.path,
                  "sweep": [{k: r[k] for k in
                             ("vector_factor", "feasible", "modeled_s")}
                            for r in records]})

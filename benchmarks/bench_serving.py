@@ -39,6 +39,11 @@ configuration in CI and asserts:
 - under paced open-loop load, p99 stays bounded by the configured
   latency budget plus service/scheduler slack.
 
+``--trace out.json`` records the whole run into the flight recorder
+(:mod:`repro.obs`) and exports a Perfetto-loadable Chrome trace;
+``$REPRO_DRIFT_LOG=path`` additionally appends a modeled-vs-measured
+drift row per engine launch (see ``docs/observability.md``).
+
 Single-core caveat: engine-vs-direct at equal width is recorded
 (``vs_direct_equal_batch``) but not asserted — on a 1-core host the
 submit path, worker loop and caller futures all serialize with the
@@ -252,9 +257,31 @@ def run(smoke: bool = False) -> list[dict]:
     return rows
 
 
+def _trace_arg(argv: list[str]) -> str | None:
+    """Pull the ``--trace out.json`` output path from argv (None if absent)."""
+    if "--trace" not in argv:
+        return None
+    i = argv.index("--trace")
+    if i + 1 >= len(argv):
+        raise SystemExit("--trace requires an output path")
+    return argv[i + 1]
+
+
 def main() -> None:
     smoke = "--smoke" in sys.argv
+    trace_out = _trace_arg(sys.argv)
+    tracer = None
+    if trace_out is not None:
+        # install the process-global recorder: every engine and compile
+        # in run() resolves trace=None to it (see docs/observability.md)
+        from repro.obs import install
+        tracer = install()
     rows = run(smoke=smoke)
+    if tracer is not None:
+        from repro.obs import export_chrome_trace
+        payload = export_chrome_trace(tracer, trace_out)
+        print(f"trace: {len(payload['traceEvents'])} events "
+              f"({tracer.dropped} dropped) -> {trace_out}")
     for r in rows:
         extra = ""
         if "speedup_vs_sequential" in r:

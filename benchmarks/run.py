@@ -2,6 +2,12 @@
 
 Prints ``name,us_per_call,derived`` CSV per the harness contract; full
 row dicts go to experiments/bench_results.json.
+
+``--trace out.json`` installs the process-global flight recorder
+(:mod:`repro.obs`) for the whole run and exports a Chrome trace-event
+file loadable in Perfetto / ``chrome://tracing`` — every compile pass,
+vectorize sweep, tuner trial and engine phase across every benchmark
+module lands in one timeline.  See ``docs/observability.md``.
 """
 from __future__ import annotations
 
@@ -74,8 +80,28 @@ def main() -> None:
         json.dump(all_rows, f, indent=1, default=str)
 
 
+def _trace_arg(argv: list[str]) -> str | None:
+    """Pull the ``--trace out.json`` output path from argv (None if absent)."""
+    if "--trace" not in argv:
+        return None
+    i = argv.index("--trace")
+    if i + 1 >= len(argv):
+        raise SystemExit("--trace requires an output path")
+    return argv[i + 1]
+
+
 if __name__ == "__main__":
+    _trace_out = _trace_arg(sys.argv)
+    _tracer = None
+    if _trace_out is not None:
+        from repro.obs import install
+        _tracer = install()
     if "--smoke" in sys.argv:
         smoke()
     else:
         main()
+    if _tracer is not None:
+        from repro.obs import export_chrome_trace
+        _payload = export_chrome_trace(_tracer, _trace_out)
+        print(f"trace: {len(_payload['traceEvents'])} events "
+              f"({_tracer.dropped} dropped) -> {_trace_out}")

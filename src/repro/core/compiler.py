@@ -43,6 +43,7 @@ from repro.core.host import CompiledApp, build_host_app
 from repro.core.schedule import Schedule, build_schedule
 from repro.core.transform import Pass, PassPipeline
 from repro.core.vectorize import TPUSpec, V5E
+from repro.obs.tracer import maybe_span, resolve_tracer
 
 __all__ = ["compile_graph"]
 
@@ -56,7 +57,8 @@ def compile_graph(graph: DataflowGraph, backend: str = "pallas", *,
                   vector_factor: int | None = None,
                   max_tile: tuple[int, int] | None = None,
                   tune: Any = None, tune_cache: Any = None,
-                  interpret: bool = True, jit: bool = True) -> CompiledApp:
+                  interpret: bool = True, jit: bool = True,
+                  trace: Any = None) -> CompiledApp:
     """Compile a dataflow graph end-to-end into a :class:`CompiledApp`.
 
     One source program, any backend — ``backend`` is one of
@@ -90,6 +92,15 @@ def compile_graph(graph: DataflowGraph, backend: str = "pallas", *,
     ``tune`` and ``vector_factor`` are mutually exclusive — one is a
     measurement, the other an override.
 
+    ``trace`` plugs the compile into the flight recorder
+    (:mod:`repro.obs`): ``True`` records into a private
+    :class:`~repro.obs.tracer.Tracer`, an explicit tracer records
+    there, and the default ``None`` consults the process-global tracer
+    (``repro.obs.install`` / ``$REPRO_TRACE``) — so an untraced
+    process pays nothing.  Every pass, the partitioner, each group's
+    vectorize sweep, the lowering and the host build get their own
+    ``compile.*`` spans.
+
     >>> from repro.core.graph import DataflowGraph
     >>> g = DataflowGraph("doc")
     >>> x = g.input("img", (8, 128))
@@ -112,25 +123,37 @@ def compile_graph(graph: DataflowGraph, backend: str = "pallas", *,
             "tune= and max_tile= are mutually exclusive: the tile cap is "
             "one of the tuner's search axes (and part of the cached "
             "config); pass max_tile_candidates to tune_graph instead")
-    tuned = None
-    if tune is not None:
-        from repro.tune.search import resolve_tuning, tuned_schedule_kwargs
-        tuned = resolve_tuning(graph, backend, tune=tune, spec=spec,
-                               cache=tune_cache, interpret=interpret,
-                               strict=strict, canonicalize=canonicalize,
-                               passes=passes)
-    if tuned is not None:
-        config, source, notes = tuned
-        sched: Schedule = build_schedule(
-            graph, canonicalize=canonicalize, strict=strict, passes=passes,
-            **tuned_schedule_kwargs(config, source, spec))
-        sched.diagnostics.extend(notes)
-    else:
-        sched = build_schedule(
-            graph, canonicalize=canonicalize, strict=strict, passes=passes,
-            spec=spec, vector_factor=vector_factor, max_tile=max_tile)
-    run, sched = lower_graph(sched.graph, backend, schedule=sched,
-                             spec=spec, vector_factor=vector_factor,
-                             interpret=interpret)
-    return build_host_app(sched, run, backend=backend, mesh=mesh,
-                          data_axis=data_axis, donate=donate, jit=jit)
+    tracer = resolve_tracer(trace)
+    with maybe_span(tracer, "compile", cat="compile", graph=graph.name,
+                    backend=backend) as top:
+        tuned = None
+        if tune is not None:
+            from repro.tune.search import resolve_tuning, tuned_schedule_kwargs
+            with maybe_span(tracer, "compile.tune", cat="compile",
+                            graph=graph.name):
+                tuned = resolve_tuning(graph, backend, tune=tune, spec=spec,
+                                       cache=tune_cache, interpret=interpret,
+                                       strict=strict, canonicalize=canonicalize,
+                                       passes=passes, trace=tracer)
+        if tuned is not None:
+            config, source, notes = tuned
+            sched: Schedule = build_schedule(
+                graph, canonicalize=canonicalize, strict=strict, passes=passes,
+                trace=tracer, **tuned_schedule_kwargs(config, source, spec))
+            sched.diagnostics.extend(notes)
+        else:
+            sched = build_schedule(
+                graph, canonicalize=canonicalize, strict=strict, passes=passes,
+                spec=spec, vector_factor=vector_factor, max_tile=max_tile,
+                trace=tracer)
+        with maybe_span(tracer, "compile.lower", cat="compile",
+                        graph=graph.name, backend=backend):
+            run, sched = lower_graph(sched.graph, backend, schedule=sched,
+                                     spec=spec, vector_factor=vector_factor,
+                                     interpret=interpret)
+        with maybe_span(tracer, "compile.host", cat="compile",
+                        graph=graph.name):
+            app = build_host_app(sched, run, backend=backend, mesh=mesh,
+                                 data_axis=data_axis, donate=donate, jit=jit)
+        top.set(kernels=len(sched.groups), stages=len(sched.order))
+    return app

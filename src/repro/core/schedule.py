@@ -36,6 +36,7 @@ import numpy as np
 from repro.core.graph import Channel, DataflowGraph, GraphError, Stage
 from repro.core.simulate import TaskTiming, analytic_latency
 from repro.core.transform import Pass, PassPipeline, default_pipeline
+from repro.obs.tracer import maybe_span
 
 __all__ = ["FusionGroup", "Schedule", "build_schedule"]
 
@@ -161,7 +162,7 @@ def build_schedule(graph: DataflowGraph, n_bundles: int = 4, *,
                    spec=None, vector_factor: int | None = None,
                    group_vector_factors: Sequence[int | None] | None = None,
                    max_tile: tuple[int, int] | None = None,
-                   tile_source: str = "measured") -> Schedule:
+                   tile_source: str = "measured", trace=None) -> Schedule:
     """Canonicalize, validate and partition ``graph`` into fusion groups.
 
     ``strict=True`` skips canonicalization and enforces the paper's
@@ -197,15 +198,19 @@ def build_schedule(graph: DataflowGraph, n_bundles: int = 4, *,
         pipeline = passes if isinstance(passes, PassPipeline) else (
             PassPipeline(tuple(passes)) if passes is not None
             else default_pipeline())
-        graph, diagnostics = pipeline.run(graph)
+        graph, diagnostics = pipeline.run(graph, tracer=trace)
     graph.validate()
     order = graph.toposort()
-    groups, fusion_diags = _partition_groups(graph, order, spec,
-                                             vector_factor)
+    with maybe_span(trace, "compile.partition", cat="compile",
+                    graph=graph.name, stages=len(order)) as sp:
+        groups, fusion_diags = _partition_groups(graph, order, spec,
+                                                 vector_factor)
+        sp.set(groups=len(groups))
     diagnostics.extend(fusion_diags)
     diagnostics.extend(_select_tiles(groups, spec, vector_factor,
                                      group_vf=group_vector_factors,
-                                     max_tile=max_tile, source=tile_source))
+                                     max_tile=max_tile, source=tile_source,
+                                     trace=trace))
     bundles = _assign_bundles(graph, n_bundles)
     return Schedule(graph, order, groups, bundles, n_bundles, diagnostics)
 
@@ -214,7 +219,7 @@ def _select_tiles(groups: list[FusionGroup], spec,
                   vector_factor: int | None,
                   group_vf: Sequence[int | None] | None = None,
                   max_tile: tuple[int, int] | None = None,
-                  source: str = "measured") -> list[str]:
+                  source: str = "measured", trace=None) -> list[str]:
     """Per-group tile/vector-factor selection (post-partition).
 
     Three modes, in precedence order: ``group_vf`` pins each group
@@ -242,7 +247,8 @@ def _select_tiles(groups: list[FusionGroup], spec,
             forced = group_vf[gi]
             g.tile_source = source
         try:
-            tile, sweep = select_tile(g, spec or V5E, forced, max_tile)
+            tile, sweep = select_tile(g, spec or V5E, forced, max_tile,
+                                      trace=trace)
         except ValueError:
             # a persistent tuned config can outlive the partitioner or
             # the spec it was measured under (same group count, changed
@@ -256,7 +262,7 @@ def _select_tiles(groups: list[FusionGroup], spec,
                          f"falling back to the analytic sweep")
             g.tile_source = "model"
             tile, sweep = select_tile(g, spec or V5E, vector_factor,
-                                      max_tile)
+                                      max_tile, trace=trace)
         names = ",".join(s.name for s in g.stages)
         if sweep is not None:
             tried = ",".join(

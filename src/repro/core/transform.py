@@ -59,14 +59,27 @@ class Pass(Protocol):
 
 @dataclasses.dataclass
 class PassPipeline:
-    """Run a sequence of passes, collecting tagged diagnostics."""
+    """Run a sequence of passes, collecting tagged diagnostics.
+
+    With a :class:`~repro.obs.tracer.Tracer` passed as ``tracer``,
+    every pass runs inside a ``compile.pass.<name>`` span carrying its
+    rewrite count — per-pass timing and diagnostics in the flight
+    recorder, the compile-side analogue of the engine's phase spans.
+    """
 
     passes: tuple[Pass, ...]
 
-    def run(self, graph: DataflowGraph) -> tuple[DataflowGraph, list[str]]:
+    def run(self, graph: DataflowGraph, tracer=None
+            ) -> tuple[DataflowGraph, list[str]]:
         diags: list[str] = []
         for p in self.passes:
-            graph, d = p.run(graph)
+            if tracer is None:
+                graph, d = p.run(graph)
+            else:
+                with tracer.span(f"compile.pass.{p.name}", cat="compile",
+                                 graph=graph.name) as sp:
+                    graph, d = p.run(graph)
+                    sp.set(rewrites=len(d))
             diags.extend(f"[{p.name}] {line}" for line in d)
         return graph, diags
 

@@ -139,15 +139,25 @@ def modeled_plane_time(group: FusionGroup, tile: tuple[int, int],
 
 def sweep_vector_factor(group: FusionGroup, spec: TPUSpec = V5E,
                         max_tile: tuple[int, int] = DEFAULT_MAX_TILE,
-                        candidates: tuple[int, ...] | None = None
-                        ) -> list[dict]:
+                        candidates: tuple[int, ...] | None = None,
+                        trace=None) -> list[dict]:
     """Cost-model sweep over vector factors; one record per candidate.
 
     Default candidates run 1..cap (every factor the plane/max_tile can
     hold, plus one infeasible sentinel so callers can check that
     feasibility is monotone).  Each record carries ``vector_factor``,
-    ``feasible``, the chosen ``tile`` and ``modeled_s``.
+    ``feasible``, the chosen ``tile`` and ``modeled_s``.  ``trace``
+    (a :class:`~repro.obs.tracer.Tracer`) wraps the sweep in a
+    ``compile.vectorize.sweep`` span recording how many candidates
+    were scored and how many were feasible.
     """
+    if trace is not None:
+        with trace.span("compile.vectorize.sweep", cat="compile",
+                        group=",".join(s.name for s in group.stages)) as sp:
+            records = sweep_vector_factor(group, spec, max_tile, candidates)
+            sp.set(candidates=len(records),
+                   feasible=sum(1 for r in records if r["feasible"]))
+            return records
     shape = group.stages[0].outputs[0].shape
     H, W = shape
     cap_tw = min(_round_up(W, LANE), max(LANE, (max_tile[1] // LANE) * LANE))
@@ -178,8 +188,8 @@ def sweep_vector_factor(group: FusionGroup, spec: TPUSpec = V5E,
 
 def select_tile(group: FusionGroup, spec: TPUSpec = V5E,
                 vector_factor: int | None = None,
-                max_tile: tuple[int, int] = DEFAULT_MAX_TILE
-                ) -> tuple[tuple[int, int], list[dict] | None]:
+                max_tile: tuple[int, int] = DEFAULT_MAX_TILE,
+                trace=None) -> tuple[tuple[int, int], list[dict] | None]:
     """Pick the group's tile; sweep the vector factor when not forced.
 
     ``vector_factor=None`` runs :func:`sweep_vector_factor` and keeps
@@ -187,11 +197,12 @@ def select_tile(group: FusionGroup, spec: TPUSpec = V5E,
     longer bursts).  An explicit factor forwards to
     :func:`choose_tile`.  Returns ``(tile, sweep_records)`` with
     ``sweep_records=None`` in forced mode; the group's ``tile`` and
-    ``vector_factor`` fields are set either way.
+    ``vector_factor`` fields are set either way.  ``trace`` threads a
+    flight recorder into the sweep.
     """
     if vector_factor is not None:
         return choose_tile(group, spec, vector_factor, max_tile), None
-    records = sweep_vector_factor(group, spec, max_tile)
+    records = sweep_vector_factor(group, spec, max_tile, trace=trace)
     feasible = [r for r in records if r["feasible"]]
     if not feasible:
         raise ValueError(

@@ -1,0 +1,32 @@
+"""Observability: flight-recorder tracing, metrics, and drift capture.
+
+The feedback channel FLOWER gets from the HLS toolchain's analyzers,
+rebuilt for the reproduction: :mod:`~repro.obs.tracer` records spans
+into a bounded ring, :mod:`~repro.obs.export` renders the ring as a
+Perfetto-loadable Chrome trace, :mod:`~repro.obs.metrics` is the
+unified counter/gauge/histogram registry that runtime telemetry
+publishes into, and :mod:`~repro.obs.drift` persists the
+(modeled, measured) pairs that will calibrate the cost model.
+
+This package imports only the standard library and numpy at module
+load — every repro layer can depend on it without cycles.
+"""
+from repro.obs.drift import (DRIFT_ENV, DriftLog, DriftRow,
+                             default_drift_path, drift_report,
+                             resolve_drift, spearman)
+from repro.obs.export import (export_chrome_trace, load_chrome_trace,
+                              to_chrome_events, validate_chrome_trace)
+from repro.obs.metrics import Counter, Gauge, Histogram, MetricsRegistry
+from repro.obs.tracer import (TRACE_ENV, Event, Tracer, get_tracer,
+                              install, maybe_span, resolve_tracer,
+                              uninstall)
+
+__all__ = [
+    "Event", "Tracer", "install", "uninstall", "get_tracer",
+    "resolve_tracer", "maybe_span", "TRACE_ENV",
+    "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "to_chrome_events", "export_chrome_trace", "load_chrome_trace",
+    "validate_chrome_trace",
+    "DriftLog", "DriftRow", "default_drift_path", "drift_report",
+    "resolve_drift", "spearman", "DRIFT_ENV",
+]

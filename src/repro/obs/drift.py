@@ -1,0 +1,283 @@
+"""Modeled-vs-measured drift capture: the cost model's report card.
+
+The analytic cost model (:func:`repro.core.vectorize.modeled_schedule_time`)
+drives schedule selection and the tuner's search order, but
+benchmarks show it is ~15x off in absolute terms and sometimes
+*misorders* candidates (ROADMAP item 3).  Calibrating it needs data:
+a persistent stream of (modeled, measured) pairs from real runs.
+
+:class:`DriftLog` is that stream — an append-only JSONL file living
+beside the :class:`~repro.tune.store.TuningCache` (same root, so one
+directory holds everything learned about this machine).  Rows are
+appended by:
+
+- the serving engine, for **every batched launch** (kind ``launch``)
+  and for the **first launch of each (signature, width)** bucket
+  (kind ``compile``, where measured time includes jit compilation);
+- the autotuner, for **every timed trial** (kind ``trial``).
+
+:func:`drift_report` turns the accumulated rows into the calibration
+input: per-group and overall **Spearman rank correlation** (does the
+model at least order configurations correctly?) and **bias** (the
+median measured/modeled ratio — the constant the model is off by).
+Spearman is computed manually (tie-averaged ranks + Pearson on the
+ranks) because scipy is not a dependency of this repo.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+from typing import Any, Iterable
+
+import numpy as np
+
+__all__ = ["DriftLog", "DriftRow", "default_drift_path", "resolve_drift",
+           "spearman", "drift_report", "DRIFT_ENV"]
+
+#: environment variable overriding the on-disk drift log location
+DRIFT_ENV = "REPRO_DRIFT_LOG"
+
+#: rows buffered in memory before an automatic flush to disk
+_FLUSH_EVERY = 64
+
+
+def default_drift_path() -> str:
+    """``drift.jsonl`` beside the tuning cache (``$REPRO_DRIFT_LOG``
+    overrides)."""
+    env = os.environ.get(DRIFT_ENV, "").strip()
+    if env:
+        return env
+    # lazy import: obs must stay importable without pulling in the
+    # tune -> core import chain at module load
+    from repro.tune.store import default_cache_root
+    return os.path.join(default_cache_root(), "drift.jsonl")
+
+
+class DriftRow:
+    """One (modeled, measured) observation.
+
+    ``modeled_s`` / ``measured_s`` are wall-clock seconds for the same
+    unit of work; ``kind`` says where the pair came from (``launch``,
+    ``compile``, ``trial``); ``signature`` + ``shapes`` + ``backend``
+    identify the workload so reports can group rows that the model
+    should at least rank consistently.
+    """
+
+    __slots__ = ("kind", "signature", "shapes", "backend", "modeled_s",
+                 "measured_s", "attrs")
+
+    def __init__(self, kind: str, signature: str, shapes: Any,
+                 backend: str, modeled_s: float, measured_s: float,
+                 attrs: dict[str, Any] | None = None):
+        self.kind = kind
+        self.signature = signature
+        self.shapes = shapes
+        self.backend = backend
+        self.modeled_s = float(modeled_s)
+        self.measured_s = float(measured_s)
+        self.attrs = attrs or {}
+
+    def as_dict(self) -> dict[str, Any]:
+        d = {"kind": self.kind, "signature": self.signature,
+             "shapes": self.shapes, "backend": self.backend,
+             "modeled_s": self.modeled_s, "measured_s": self.measured_s}
+        if self.attrs:
+            d["attrs"] = self.attrs
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict[str, Any]) -> "DriftRow":
+        return cls(d.get("kind", "launch"), d.get("signature", ""),
+                   d.get("shapes"), d.get("backend", ""),
+                   d.get("modeled_s", 0.0), d.get("measured_s", 0.0),
+                   d.get("attrs"))
+
+
+class DriftLog:
+    """Append-only JSONL log of drift rows (thread-safe, buffered).
+
+    ``record`` costs a dict build and a list append; rows hit disk
+    every ``_FLUSH_EVERY`` records, on :meth:`flush`, and at
+    interpreter exit — the serving hot path never waits on a write.
+    A missing parent directory is created on first flush.
+    """
+
+    def __init__(self, path: str | None = None):
+        self.path = path if path is not None else default_drift_path()
+        self._buf: list[dict[str, Any]] = []
+        self._lock = threading.Lock()
+        import atexit
+        atexit.register(self.flush)
+
+    def record(self, kind: str, signature: str, shapes: Any,
+               backend: str, modeled_s: float, measured_s: float,
+               **attrs: Any) -> None:
+        row = DriftRow(kind, signature, shapes, backend, modeled_s,
+                       measured_s, attrs or None)
+        with self._lock:
+            self._buf.append(row.as_dict())
+            need_flush = len(self._buf) >= _FLUSH_EVERY
+        if need_flush:
+            self.flush()
+
+    def flush(self) -> None:
+        with self._lock:
+            if not self._buf:
+                return
+            rows, self._buf = self._buf, []
+        parent = os.path.dirname(os.path.abspath(self.path))
+        os.makedirs(parent, exist_ok=True)
+        with open(self.path, "a") as f:
+            for row in rows:
+                f.write(json.dumps(row) + "\n")
+
+    def rows(self) -> list[DriftRow]:
+        """All rows: what's on disk plus the unflushed buffer."""
+        out: list[DriftRow] = []
+        if os.path.exists(self.path):
+            with open(self.path) as f:
+                for line in f:
+                    line = line.strip()
+                    if not line:
+                        continue
+                    try:
+                        out.append(DriftRow.from_dict(json.loads(line)))
+                    except (json.JSONDecodeError, TypeError):
+                        continue       # torn write: skip, keep reading
+        with self._lock:
+            out.extend(DriftRow.from_dict(d) for d in self._buf)
+        return out
+
+    def __len__(self) -> int:
+        n = 0
+        if os.path.exists(self.path):
+            with open(self.path) as f:
+                n = sum(1 for line in f if line.strip())
+        with self._lock:
+            return n + len(self._buf)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._buf.clear()
+        if os.path.exists(self.path):
+            os.remove(self.path)
+
+
+def resolve_drift(drift: Any) -> DriftLog | None:
+    """Normalize a user-facing ``drift=`` argument into a log.
+
+    ``None`` enables drift capture only when ``$REPRO_DRIFT_LOG`` is
+    set (off-by-default: no disk writes unless asked); ``True`` logs
+    to :func:`default_drift_path`; a path string logs there; ``False``
+    opts out even under the env var; a :class:`DriftLog` passes
+    through.
+    """
+    if drift is None:
+        if not os.environ.get(DRIFT_ENV, "").strip():
+            return None
+        return DriftLog()
+    if drift is True:
+        return DriftLog()
+    if drift is False:
+        return None
+    if isinstance(drift, str):
+        return DriftLog(drift)
+    if not isinstance(drift, DriftLog):
+        raise TypeError(f"drift must be a DriftLog, path, True/False or "
+                        f"None; got {type(drift).__name__}")
+    return drift
+
+
+def _ranks(xs: np.ndarray) -> np.ndarray:
+    """Tie-averaged ranks (1-based, fractional on ties)."""
+    order = np.argsort(xs, kind="stable")
+    ranks = np.empty(len(xs), dtype=np.float64)
+    i = 0
+    while i < len(xs):
+        j = i
+        while j + 1 < len(xs) and xs[order[j + 1]] == xs[order[i]]:
+            j += 1
+        ranks[order[i:j + 1]] = (i + j) / 2.0 + 1.0
+        i = j + 1
+    return ranks
+
+
+def spearman(xs: Iterable[float], ys: Iterable[float]) -> float:
+    """Spearman rank correlation of two sequences (nan if degenerate).
+
+    >>> round(spearman([1, 2, 3, 4], [10, 20, 30, 40]), 3)
+    1.0
+    >>> round(spearman([1, 2, 3, 4], [40, 30, 20, 10]), 3)
+    -1.0
+    """
+    x = np.asarray(list(xs), dtype=np.float64)
+    y = np.asarray(list(ys), dtype=np.float64)
+    if len(x) != len(y):
+        raise ValueError(f"length mismatch: {len(x)} vs {len(y)}")
+    if len(x) < 2:
+        return float("nan")
+    rx, ry = _ranks(x), _ranks(y)
+    sx, sy = rx.std(), ry.std()
+    if sx == 0 or sy == 0:
+        return float("nan")
+    return float(((rx - rx.mean()) * (ry - ry.mean())).mean() / (sx * sy))
+
+
+def drift_report(rows: Iterable[DriftRow] | DriftLog | None = None,
+                 *, min_group: int = 2) -> dict[str, Any]:
+    """Summarize accumulated drift rows into the calibration inputs.
+
+    Returns::
+
+        {"n": ..., "spearman": ...,        # overall rank correlation
+         "bias": ...,                      # median measured/modeled
+         "log10_spread": ...,              # IQR of log10(ratio)
+         "groups": {sig: {"n", "spearman", "bias"}, ...},
+         "by_kind": {kind: n, ...}}
+
+    ``spearman`` near 1 means the model orders workloads correctly
+    even if its absolute scale is off (then ``bias`` is the single
+    constant to fold in); near 0 or negative reproduces the
+    misordering that makes tuning-by-model unreliable (ROADMAP item
+    3).  Groups smaller than ``min_group`` are skipped for per-group
+    correlation but still count toward the overall stats.
+    """
+    if rows is None:
+        rows = DriftLog()
+    if isinstance(rows, DriftLog):
+        rows = rows.rows()
+    rows = [r for r in rows if r.modeled_s > 0 and r.measured_s > 0]
+    if not rows:
+        return {"n": 0, "spearman": float("nan"), "bias": float("nan"),
+                "log10_spread": float("nan"), "groups": {},
+                "by_kind": {}}
+    modeled = np.asarray([r.modeled_s for r in rows])
+    measured = np.asarray([r.measured_s for r in rows])
+    ratio = measured / modeled
+    by_kind: dict[str, int] = {}
+    groups: dict[str, list[DriftRow]] = {}
+    for r in rows:
+        by_kind[r.kind] = by_kind.get(r.kind, 0) + 1
+        groups.setdefault(r.signature, []).append(r)
+    group_stats: dict[str, dict[str, Any]] = {}
+    for sig, rs in sorted(groups.items()):
+        if len(rs) < min_group:
+            continue
+        g_mod = [r.modeled_s for r in rs]
+        g_meas = [r.measured_s for r in rs]
+        group_stats[sig] = {
+            "n": len(rs),
+            "spearman": spearman(g_mod, g_meas),
+            "bias": float(np.median(np.asarray(g_meas)
+                                    / np.asarray(g_mod))),
+        }
+    q75, q25 = np.percentile(np.log10(ratio), [75, 25])
+    return {
+        "n": len(rows),
+        "spearman": spearman(modeled, measured),
+        "bias": float(np.median(ratio)),
+        "log10_spread": float(q75 - q25),
+        "groups": group_stats,
+        "by_kind": by_kind,
+    }

@@ -45,6 +45,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.host import CompiledApp
+from repro.obs.tracer import resolve_tracer
 
 __all__ = ["MicroBatcher"]
 
@@ -59,7 +60,8 @@ class MicroBatcher:
 
     def __init__(self, max_batch: int = 8, donate: bool = True,
                  replicas: int = 1, replica_axis: str = "replica",
-                 devices: list | None = None, staging_depth: int = 2):
+                 devices: list | None = None, staging_depth: int = 2,
+                 trace: Any = None):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         if replicas < 1:
@@ -107,6 +109,9 @@ class MicroBatcher:
         self._staging_clock: dict[tuple[str, int], int] = {}
         #: width -> number of launches that used that bucket
         self.bucket_launches: dict[int, int] = {}
+        #: flight recorder for per-bucket stack/launch spans (None =
+        #: untraced; ``False`` opts out even of the global tracer)
+        self.tracer = resolve_tracer(trace) if trace is not False else None
 
     # ------------------------------------------------------------------
     # bucketed pad widths
@@ -285,4 +290,13 @@ class MicroBatcher:
         if timings is not None:
             timings["stack"] = t1 - t0
             timings["launch"] = t2 - t1
+        if self.tracer is not None:
+            # retroactive complete spans from the stamps above — the
+            # recording itself adds nothing between stack and dispatch
+            self.tracer.complete("batch.stack", t0, t1 - t0,
+                                 cat="batcher", app=app.graph.name,
+                                 width=width, rows=len(requests))
+            self.tracer.complete("batch.launch", t1, t2 - t1,
+                                 cat="batcher", app=app.graph.name,
+                                 width=width)
         return dict(zip(app.output_names, outs))

@@ -155,6 +155,10 @@ class CompileCache:
     def get(self, graph: DataflowGraph, backend: str = "pallas",
             **compile_kwargs: Any) -> CompiledApp:
         """Return a compiled app for ``graph``, tracing at most once."""
+        # ``trace`` is observability plumbing, not a compile option: a
+        # Tracer's repr is identity-based, so keying it would split the
+        # cache per tracer instance for semantically identical compiles
+        trace = compile_kwargs.pop("trace", None)
         okey = (backend, tuple(sorted((k, _opt_repr(v))
                                       for k, v in compile_kwargs.items())))
         with self._lock:
@@ -169,10 +173,12 @@ class CompileCache:
             if glock is None:
                 glock = self._graph_locks[graph] = threading.Lock()
         with glock:
-            return self._get_slow(graph, okey, backend, compile_kwargs)
+            return self._get_slow(graph, okey, backend, compile_kwargs,
+                                  trace=trace)
 
     def _get_slow(self, graph: DataflowGraph, okey: tuple, backend: str,
-                  compile_kwargs: dict[str, Any]) -> CompiledApp:
+                  compile_kwargs: dict[str, Any],
+                  trace: Any = None) -> CompiledApp:
         """Signature lookup / trace under the per-graph-object lock."""
         with self._lock:
             per = self._by_graph.get(graph)
@@ -199,6 +205,10 @@ class CompileCache:
                 self._by_graph.setdefault(graph, {})[okey] = app
             return app
         try:
+            # only forward trace= when set: custom compile_fns need not
+            # grow the parameter to keep working untraced
+            if trace is not None:
+                compile_kwargs = dict(compile_kwargs, trace=trace)
             app = self._compile(graph, backend=backend, **compile_kwargs)
         except BaseException as e:
             with self._lock:

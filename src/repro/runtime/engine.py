@@ -62,6 +62,9 @@ import numpy as np
 
 from repro.core.graph import DataflowGraph
 from repro.core.host import CompiledApp
+from repro.core.vectorize import modeled_schedule_time
+from repro.obs.drift import resolve_drift
+from repro.obs.tracer import resolve_tracer
 from repro.runtime.batching import MicroBatcher
 from repro.runtime.cache import CompileCache
 from repro.runtime.slots import SlotPool
@@ -94,6 +97,9 @@ class StreamRequest:
         self.inputs = dict(inputs)
         self.t_submit = time.perf_counter()
         self.t_taken: float | None = None
+        #: per-request correlation id, set by a *traced* engine at
+        #: submit; every span of this request's life carries it
+        self.trace_id: int | None = None
         self._lock = threading.Lock()
         # the wakeup Event is allocated lazily by the first waiter: a
         # request that completes before anyone blocks on it (the common
@@ -258,7 +264,8 @@ class StreamEngine:
                  bucket_pad: bool = True,
                  app_weights: Mapping[str, float] | None = None,
                  max_pending: int | None = None,
-                 autostart: bool = True, **compile_kwargs: Any):
+                 autostart: bool = True, trace: Any = None,
+                 drift: Any = None, **compile_kwargs: Any):
         self.backend = backend
         self.max_queue = max_queue
         self.max_batch = max_batch
@@ -268,6 +275,14 @@ class StreamEngine:
         self.cache = cache or CompileCache()
         self.telemetry = telemetry or Telemetry()
         self.telemetry.replicas = replicas
+        # flight recorder + drift log, both None unless asked for
+        # (trace=True/Tracer/$REPRO_TRACE, drift=True/path/DriftLog/
+        # $REPRO_DRIFT_LOG) — the hot path guards every emission with
+        # an `is not None` check, so the untraced engine pays nothing
+        self.tracer = resolve_tracer(trace)
+        self.drift = resolve_drift(drift)
+        self._modeled_s: dict[str, float] = {}   # sig -> modeled s/item
+        self._launched: set[tuple[str, int]] = set()  # warm (sig, width)
         self._compile_kwargs = compile_kwargs
         self._bucket_pad = bucket_pad
         self._weights: dict[str, float] = dict(app_weights or {})
@@ -283,7 +298,9 @@ class StreamEngine:
         # rotation corrupts any in-flight batch still reading it
         self._batcher = MicroBatcher(max_batch=max_batch, donate=donate,
                                      replicas=replicas,
-                                     staging_depth=inflight + 1)
+                                     staging_depth=inflight + 1,
+                                     trace=self.tracer
+                                     if self.tracer is not None else False)
         self._apps: dict[str, CompiledApp] = {}
         self._io_specs: dict[str, list[tuple[str, tuple]]] = {}
         self._form_obs: dict[str, Any] = {}   # worker-only scratch
@@ -321,6 +338,9 @@ class StreamEngine:
             raise RuntimeError("engine is closed")
         if isinstance(graph, CompiledApp):
             app = graph
+        elif self.tracer is not None:
+            app = self.cache.get(graph, backend=self.backend,
+                                 trace=self.tracer, **self._compile_kwargs)
         else:
             app = self.cache.get(graph, backend=self.backend,
                                  **self._compile_kwargs)
@@ -344,6 +364,8 @@ class StreamEngine:
                                  f"{shape}, got "
                                  f"{tuple(np.shape(inputs[name]))}")
         req = StreamRequest(app, inputs)
+        if self.tracer is not None:
+            req.trace_id = self.tracer.new_id()
         end = None if timeout is None else time.perf_counter() + timeout
         with self._cond:
             aq = self._queues.get(sig)
@@ -441,6 +463,8 @@ class StreamEngine:
         if wait:
             # a submit that raced past the closed check must not hang
             self._fail_all(RuntimeError("engine closed"))
+        if self.drift is not None:
+            self.drift.flush()
 
     def __enter__(self) -> "StreamEngine":
         return self
@@ -604,9 +628,14 @@ class StreamEngine:
             self._obs.append((t_disp, len(batch), self._form_obs,
                               None, None))
         self._form_obs = {}
+        # stage boundary stamps for the per-request trace timeline,
+        # reconstructed from the batcher's phase durations so the hot
+        # path takes no extra clock reads
+        t_s1 = t_disp - timings.get("launch", 0.0)
+        t_s0 = t_s1 - timings.get("stack", 0.0)
         if not self._pool.free_slots():
             self._retire(self._pool.oldest())     # rotate: block on oldest
-        self._pool.submit((batch, outs, t_disp))
+        self._pool.submit((batch, outs, t_disp, (t_s0, t_s1)))
         self._pool.admit()
 
     def _reap(self) -> None:
@@ -620,7 +649,7 @@ class StreamEngine:
             return
 
         def _is_ready(item: Any) -> bool:
-            _batch, outs, _t = item
+            outs = item[1]
             return all(o.is_ready() for o in outs.values()
                        if hasattr(o, "is_ready"))
 
@@ -630,7 +659,7 @@ class StreamEngine:
     def _retire(self, slot: int | None) -> None:
         if slot is None:
             return
-        batch, outs, t_disp = self._pool.retire(slot)
+        batch, outs, t_disp, stage_ts = self._pool.retire(slot)
         t0 = time.perf_counter()
         host = {k: np.asarray(v) for k, v in outs.items()}  # blocks here
         now = time.perf_counter()
@@ -639,12 +668,14 @@ class StreamEngine:
         # report() must see its own completion.  Requests whose claim
         # lost to cancel() have their computed row discarded.
         done: list[float] = []
+        winners: list[StreamRequest] = []
         wake: list[threading.Event] = []
         for i, req in enumerate(batch):
             won, event = req._finish_quiet(
                 {k: v[i] for k, v in host.items()})
             if won:
                 done.append(now - req.t_submit)
+                winners.append(req)
             if event is not None:
                 wake.append(event)
         svc = now - t_disp
@@ -658,8 +689,66 @@ class StreamEngine:
             backlog = len(self._obs)
         for event in wake:
             event.set()
+        # trace/drift emission AFTER waking waiters: it is retroactive
+        # bookkeeping reconstructed from stamps, never waiter latency
+        if self.tracer is not None or self.drift is not None:
+            self._record_batch(batch, winners, host, t_disp, stage_ts,
+                               t0, now, svc)
         if backlog >= 64:
             self._flush_obs()
+
+    def _record_batch(self, batch: list[StreamRequest],
+                      winners: list[StreamRequest],
+                      host: dict[str, np.ndarray], t_disp: float,
+                      stage_ts: tuple[float, float], t0: float,
+                      now: float, svc: float) -> None:
+        """Emit one retired batch's trace timelines and drift row.
+
+        Runs on the worker thread at retirement, entirely from
+        timestamps captured earlier — nothing here sat on the
+        submit→launch path.  Each *winning* request (cancelled ones
+        produce no timeline) gets a contiguous async phase chain
+        ``queue_wait → form → stack → launch → execute → readback``
+        tiling exactly [t_submit, complete] under its trace id.
+        """
+        app = batch[0].app
+        sig = app.signature()
+        width = next(iter(host.values())).shape[0] if host else len(batch)
+        t_s0, t_s1 = stage_ts
+        tr = self.tracer
+        if tr is not None:
+            name = app.graph.name
+            for req in winners:
+                aid = req.trace_id
+                if aid is None:        # submitted before tracing was on
+                    continue
+                tt = req.t_taken if req.t_taken is not None else t_s0
+                tr.async_event("request", "b", aid, ts=req.t_submit,
+                               cat="request", app=name, batch=len(batch),
+                               width=width)
+                tr.async_span("queue_wait", aid, req.t_submit, tt,
+                              cat="request")
+                tr.async_span("form", aid, tt, t_s0, cat="request")
+                tr.async_span("stack", aid, t_s0, t_s1, cat="request")
+                tr.async_span("launch", aid, t_s1, t_disp, cat="request")
+                tr.async_span("execute", aid, t_disp, t0, cat="request")
+                tr.async_span("readback", aid, t0, now, cat="request")
+                tr.async_event("request", "e", aid, ts=now, cat="request")
+            tr.counter("engine.inflight", self._pool.active)
+        if self.drift is not None:
+            modeled = self._modeled_s.get(sig)
+            if modeled is None:
+                modeled = self._modeled_s[sig] = modeled_schedule_time(
+                    app.schedule)
+            kind = "launch"
+            if (sig, width) not in self._launched:
+                self._launched.add((sig, width))
+                kind = "compile"       # cold (sig, width): svc includes jit
+            self.drift.record(
+                kind, sig,
+                [list(shape) for _n, shape in self._io_specs.get(sig, [])],
+                self.backend, modeled * width, svc,
+                app=app.graph.name, width=width, batch=len(batch))
 
     def _wait_for_work(self) -> None:
         """Park until new work arrives or the formation deadline lands."""
@@ -693,6 +782,6 @@ class StreamEngine:
         for r in doomed:
             r._fail(err)
         while self._pool.active:
-            batch, _outs, _t = self._pool.retire(self._pool.oldest())
+            batch = self._pool.retire(self._pool.oldest())[0]
             for r in batch:
                 r._fail(err)

@@ -9,6 +9,17 @@ from a running :class:`~repro.runtime.engine.StreamEngine`, and
 predictions for the app being served, so every engine report shows
 ``measured`` next to ``modeled`` — the paper's performance model
 validated against live traffic instead of a synthetic sweep.
+
+Samples live in a :class:`~repro.obs.metrics.MetricsRegistry` — one
+:class:`~repro.obs.metrics.Histogram` per sample stream (latency,
+queue depth, batch size, one per hot-path phase) and one
+:class:`~repro.obs.metrics.Counter` per event count — instead of
+private lists, so an operator can enumerate everything the engine
+measures through the registry.  The histograms are **uniform
+reservoirs** (deterministically seeded), not first-N buffers: a
+multi-hour serving run's p99 reflects the whole run, where the old
+first-``_MAX_SAMPLES`` truncation froze percentiles on whatever the
+warm-up era looked like.
 """
 from __future__ import annotations
 
@@ -19,6 +30,7 @@ from typing import Any
 import numpy as np
 
 from repro.core.simulate import TaskTiming, analytic_latency, simulate_pipeline
+from repro.obs.metrics import MetricsRegistry
 
 __all__ = ["PHASES", "Telemetry", "modeled_latency"]
 
@@ -28,7 +40,7 @@ __all__ = ["PHASES", "Telemetry", "modeled_latency"]
 #: and forcing outputs back to host memory
 PHASES = ("queue_wait", "form", "stack", "launch", "readback")
 
-#: cap on per-request samples kept in memory (reservoir of latest)
+#: reservoir capacity for each sample stream (latency, depths, ...)
 _MAX_SAMPLES = 100_000
 
 #: EWMA smoothing for the observed per-batch service time that drives
@@ -77,45 +89,78 @@ def modeled_latency(app: Any, n_items: int, depth: int = 2,
 
 
 class Telemetry:
-    """Thread-safe metric aggregation for a serving engine."""
+    """Thread-safe metric aggregation for a serving engine.
 
-    def __init__(self) -> None:
+    All samples and counters live in ``self.registry`` (a
+    :class:`~repro.obs.metrics.MetricsRegistry`, shareable across
+    components); :class:`Telemetry` keeps only the EWMA state and the
+    first/last completion stamps that throughput needs.  Metric names:
+    ``latency_s``, ``queue_depth``, ``batch_size``, ``phase_<p>_s``
+    (histograms) and ``submitted`` / ``completed`` / ``shed`` /
+    ``cancelled`` (counters) — the same values the snapshot reports,
+    queryable individually.
+    """
+
+    def __init__(self, registry: MetricsRegistry | None = None,
+                 max_samples: int = _MAX_SAMPLES, seed: int = 0) -> None:
         self._lock = threading.Lock()
-        self._latencies_s: list[float] = []
-        self._queue_depths: list[int] = []
-        self._batch_sizes: list[int] = []
-        self._phases_s: dict[str, list[float]] = {p: [] for p in PHASES}
+        self.registry = registry if registry is not None else MetricsRegistry()
+        reg, cap = self.registry, max_samples
+        self._latency = reg.histogram("latency_s", cap, seed)
+        self._queue_depth = reg.histogram("queue_depth", cap, seed)
+        self._batch_size = reg.histogram("batch_size", cap, seed)
+        self._phases = {p: reg.histogram(f"phase_{p}_s", cap, seed)
+                        for p in PHASES}
+        self._max_samples = cap
+        self._seed = seed
+        self._c_submitted = reg.counter("submitted")
+        self._c_completed = reg.counter("completed")
+        self._c_shed = reg.counter("shed")
+        self._c_cancelled = reg.counter("cancelled")
         self._service_ewma_s: float | None = None
         self._t_first: float | None = None
         self._t_last: float | None = None
-        self.completed = 0
-        self.submitted = 0
-        self.shed = 0
-        self.cancelled = 0
         #: device-farm width the served throughput is spread over;
         #: owned by the engine (it sets this to its ``replicas``) so
         #: reports show per-replica throughput next to the modeled
         #: linear scaling
         self.replicas = 1
 
+    # -- counters (registry-backed, read like plain attributes) --------
+    @property
+    def submitted(self) -> int:
+        return self._c_submitted.value
+
+    @property
+    def completed(self) -> int:
+        return self._c_completed.value
+
+    @property
+    def shed(self) -> int:
+        return self._c_shed.value
+
+    @property
+    def cancelled(self) -> int:
+        return self._c_cancelled.value
+
     # -- observation hooks ---------------------------------------------
     def observe_submit(self, queue_depth: int) -> None:
-        with self._lock:
-            self.submitted += 1
-            if len(self._queue_depths) < _MAX_SAMPLES:
-                self._queue_depths.append(queue_depth)
+        self._c_submitted.inc()
+        self._queue_depth.observe(queue_depth)
 
     def observe_batch(self, size: int) -> None:
-        with self._lock:
-            if len(self._batch_sizes) < _MAX_SAMPLES:
-                self._batch_sizes.append(size)
+        self._batch_size.observe(size)
+
+    def _phase(self, phase: str):
+        h = self._phases.get(phase)
+        if h is None:
+            h = self._phases[phase] = self.registry.histogram(
+                f"phase_{phase}_s", self._max_samples, self._seed)
+        return h
 
     def observe_phase(self, phase: str, seconds: float) -> None:
         """Record time spent in one hot-path phase (see :data:`PHASES`)."""
-        with self._lock:
-            samples = self._phases_s.setdefault(phase, [])
-            if len(samples) < _MAX_SAMPLES:
-                samples.append(seconds)
+        self._phase(phase).observe(seconds)
 
     def observe_service(self, seconds: float) -> None:
         """Record one batch's dispatch→ready service time (EWMA'd).
@@ -134,99 +179,59 @@ class Telemetry:
                              phases: dict[str, Any] | None = None,
                              completions: list[float] | None = None,
                              service_s: float | None = None) -> None:
-        """Record one batch's worth of observations under ONE lock.
+        """Record one batch's worth of observations in one call.
 
-        The serve loop's per-batch bookkeeping (batch size, phase
-        durations, per-request completion latencies, service EWMA)
-        previously cost a lock acquisition per metric per request —
-        measurable against sub-100us kernels.  ``phases`` values may
-        be a scalar duration or a list of per-request durations.
+        ``phases`` values may be a scalar duration or a list of
+        per-request durations.  (Histograms carry their own fine-
+        grained locks; the shared Telemetry lock only guards the EWMA
+        and throughput stamps.)
         """
-        now = time.perf_counter()
-        with self._lock:
-            if batch_size is not None \
-                    and len(self._batch_sizes) < _MAX_SAMPLES:
-                self._batch_sizes.append(batch_size)
-            if phases:
-                for p, vals in phases.items():
-                    samples = self._phases_s.setdefault(p, [])
-                    room = _MAX_SAMPLES - len(samples)
-                    if room <= 0:
-                        continue
-                    if isinstance(vals, (int, float)):
-                        samples.append(float(vals))
-                    else:
-                        samples.extend(vals[:room])
-            if completions:
-                if self._t_first is None:
-                    self._t_first = now
-                self._t_last = now
-                self.completed += len(completions)
-                room = _MAX_SAMPLES - len(self._latencies_s)
-                if room > 0:
-                    self._latencies_s.extend(completions[:room])
-            if service_s is not None:
-                prev = self._service_ewma_s
-                self._service_ewma_s = (service_s if prev is None else
-                                        _SERVICE_ALPHA * service_s
-                                        + (1.0 - _SERVICE_ALPHA) * prev)
+        self.observe_batches([(time.perf_counter(), batch_size, phases,
+                               completions, service_s)])
 
     def observe_batches(self, entries: list) -> None:
-        """Bulk-ingest buffered per-batch observations under ONE lock.
+        """Bulk-ingest buffered per-batch observations.
 
         Each entry is ``(t_observed, batch_size, phases, completions,
-        service_s)`` with the same semantics as
-        :meth:`observe_batch_events`; ``t_observed`` preserves the
-        original wall-clock of the observation so throughput spans
-        stay correct under deferred flushing.
+        service_s)``; ``t_observed`` preserves the original wall-clock
+        of the observation so throughput spans stay correct under
+        deferred flushing.
         """
-        with self._lock:
-            for now, batch_size, phases, completions, service_s in entries:
-                if batch_size is not None \
-                        and len(self._batch_sizes) < _MAX_SAMPLES:
-                    self._batch_sizes.append(batch_size)
-                if phases:
-                    for p, vals in phases.items():
-                        samples = self._phases_s.setdefault(p, [])
-                        room = _MAX_SAMPLES - len(samples)
-                        if room <= 0:
-                            continue
-                        if isinstance(vals, (int, float)):
-                            samples.append(float(vals))
-                        else:
-                            samples.extend(vals[:room])
-                if completions:
+        n_done = 0
+        for now, batch_size, phases, completions, service_s in entries:
+            if batch_size is not None:
+                self._batch_size.observe(batch_size)
+            if phases:
+                for p, vals in phases.items():
+                    h = self._phase(p)
+                    if isinstance(vals, (int, float)):
+                        h.observe(float(vals))
+                    else:
+                        h.extend(vals)
+            if completions:
+                n_done += len(completions)
+                self._latency.extend(completions)
+                with self._lock:
                     if self._t_first is None:
                         self._t_first = now
                     self._t_last = now
-                    self.completed += len(completions)
-                    room = _MAX_SAMPLES - len(self._latencies_s)
-                    if room > 0:
-                        self._latencies_s.extend(completions[:room])
-                if service_s is not None:
-                    prev = self._service_ewma_s
-                    self._service_ewma_s = (
-                        service_s if prev is None else
-                        _SERVICE_ALPHA * service_s
-                        + (1.0 - _SERVICE_ALPHA) * prev)
+            if service_s is not None:
+                self.observe_service(service_s)
+        if n_done:
+            self._c_completed.inc(n_done)
 
     def observe_submits(self, count: int, queue_depths: list[int]) -> None:
-        """Bulk-ingest buffered submit observations under ONE lock."""
-        with self._lock:
-            self.submitted += count
-            room = _MAX_SAMPLES - len(self._queue_depths)
-            if room > 0:
-                self._queue_depths.extend(queue_depths[:room])
+        """Bulk-ingest buffered submit observations."""
+        self._c_submitted.inc(count)
+        self._queue_depth.extend(queue_depths)
 
     def observe_shed(self) -> None:
         """One request rejected by admission control (QueueFullError)."""
-        with self._lock:
-            self.shed += 1
+        self._c_shed.inc()
 
     def observe_cancel(self) -> None:
         """One request abandoned by its caller before completion."""
-        with self._lock:
-            self.cancelled += 1
+        self._c_cancelled.inc()
 
     @property
     def service_ewma_s(self) -> float | None:
@@ -240,9 +245,8 @@ class Telemetry:
             if self._t_first is None:
                 self._t_first = now
             self._t_last = now
-            self.completed += 1
-            if len(self._latencies_s) < _MAX_SAMPLES:
-                self._latencies_s.append(latency_s)
+        self._c_completed.inc()
+        self._latency.observe(latency_s)
 
     def reset(self) -> None:
         """Zero all samples and counters (keeps ``replicas``).
@@ -250,16 +254,13 @@ class Telemetry:
         Lets a benchmark or operator mark the start of a measurement
         window after warmup — compile latencies from first-launch
         bucket warming would otherwise dominate small-sample p99s.
+        Reservoir RNGs are re-seeded, so the window replays
+        deterministically.
         """
+        self.registry.reset()
         with self._lock:
-            self._latencies_s.clear()
-            self._queue_depths.clear()
-            self._batch_sizes.clear()
-            self._phases_s = {p: [] for p in PHASES}
             self._service_ewma_s = None
             self._t_first = self._t_last = None
-            self.completed = self.submitted = 0
-            self.shed = self.cancelled = 0
 
     # -- aggregation ---------------------------------------------------
     @staticmethod
@@ -268,38 +269,42 @@ class Telemetry:
 
     def snapshot(self) -> dict[str, Any]:
         """Measured serving metrics so far."""
+        lat = self._latency.samples()
+        depths = self._queue_depth.samples()
+        sizes = self._batch_size.samples()
+        completed = self._c_completed.value
         with self._lock:
-            lat = list(self._latencies_s)
             span = ((self._t_last - self._t_first)
-                    if (self._t_first is not None and self.completed > 1)
+                    if (self._t_first is not None and completed > 1)
                     else 0.0)
-            tput = (self.completed - 1) / span if span else 0.0
-            phases = {
-                p: {"mean_ms": float(np.mean(xs)) * 1e3,
-                    "p99_ms": self._pct(xs, 99) * 1e3,
-                    "count": len(xs)}
-                for p, xs in self._phases_s.items() if xs
-            }
-            return {
-                "submitted": self.submitted,
-                "completed": self.completed,
-                "shed": self.shed,
-                "cancelled": self.cancelled,
-                "service_ewma_ms": ((self._service_ewma_s or 0.0) * 1e3),
-                "phases": phases,
-                "throughput_rps": tput,
-                "replicas": self.replicas,
-                "throughput_per_replica_rps": tput / self.replicas,
-                "latency_p50_ms": self._pct(lat, 50) * 1e3,
-                "latency_p99_ms": self._pct(lat, 99) * 1e3,
-                "latency_mean_ms": float(np.mean(lat)) * 1e3 if lat else 0.0,
-                "queue_depth_mean": (float(np.mean(self._queue_depths))
-                                     if self._queue_depths else 0.0),
-                "queue_depth_max": (max(self._queue_depths)
-                                    if self._queue_depths else 0),
-                "batch_size_mean": (float(np.mean(self._batch_sizes))
-                                    if self._batch_sizes else 0.0),
-            }
+            ewma = self._service_ewma_s
+        tput = (completed - 1) / span if span else 0.0
+        phases = {}
+        for p, h in self._phases.items():
+            xs = h.samples()
+            if xs:
+                phases[p] = {"mean_ms": float(np.mean(xs)) * 1e3,
+                             "p99_ms": self._pct(xs, 99) * 1e3,
+                             "count": h.count}
+        return {
+            "submitted": self._c_submitted.value,
+            "completed": completed,
+            "shed": self._c_shed.value,
+            "cancelled": self._c_cancelled.value,
+            "service_ewma_ms": ((ewma or 0.0) * 1e3),
+            "phases": phases,
+            "throughput_rps": tput,
+            "replicas": self.replicas,
+            "throughput_per_replica_rps": tput / self.replicas,
+            "latency_p50_ms": self._pct(lat, 50) * 1e3,
+            "latency_p99_ms": self._pct(lat, 99) * 1e3,
+            "latency_mean_ms": float(np.mean(lat)) * 1e3 if lat else 0.0,
+            "queue_depth_mean": (float(np.mean(depths))
+                                 if depths else 0.0),
+            "queue_depth_max": (int(max(depths)) if depths else 0),
+            "batch_size_mean": (float(np.mean(sizes))
+                                if sizes else 0.0),
+        }
 
     def report(self, *, cache: Any = None,
                modeled: dict[str, Any] | None = None) -> dict[str, Any]:

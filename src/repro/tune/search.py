@@ -46,6 +46,7 @@ Doctest (fake measurements, so it runs anywhere — real use omits
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 from typing import Any, Callable, Sequence
 
@@ -55,6 +56,8 @@ from repro.core.schedule import Schedule, build_schedule
 from repro.core.vectorize import (DEFAULT_MAX_TILE, TPUSpec, V5E,
                                   modeled_schedule_time, scale_spec,
                                   sweep_vector_factor)
+from repro.obs.drift import DriftLog, resolve_drift
+from repro.obs.tracer import maybe_span, resolve_tracer
 from repro.tune.store import (ScheduleConfig, TuningCache, TuningKey,
                               TuningRecord, detect_device_kind)
 
@@ -200,7 +203,8 @@ def tune_graph(graph, backend: str = "pallas", *,
                max_tile_candidates: Sequence[tuple[int, int]] = (
                    DEFAULT_MAX_TILE, (128, 1024)),
                vmem_fractions: Sequence[float] = (1.0,),
-               force: bool = False) -> TuningResult:
+               force: bool = False, trace: Any = None,
+               drift: Any = None) -> TuningResult:
     """Search the schedule space for ``graph`` by measuring candidates.
 
     The search space is the per-group vector factor (top-``top_k`` by
@@ -213,11 +217,25 @@ def tune_graph(graph, backend: str = "pallas", *,
     measured).  Results persist in ``cache`` keyed by graph signature,
     backend, device kind and input shapes; a hit returns immediately
     with ``n_measurements == 0``.
+
+    Observability: ``trace`` wraps every measurement in a
+    ``tune.trial`` span (label, modeled and measured seconds) for the
+    flight recorder; each trial also appends a ``kind="trial"``
+    (modeled, measured) row to the drift log living beside the tuning
+    cache (``drift.jsonl`` under ``cache.root``), the data ROADMAP
+    item 3's calibration pass consumes.  ``drift=False`` disables the
+    rows, ``drift=`` a :class:`~repro.obs.drift.DriftLog`/path
+    redirects them.
     """
     # NOT `cache or ...`: an empty TuningCache is falsy (__len__ == 0)
     # and must still be used, not silently swapped for the default root
     cache = cache if cache is not None else TuningCache()
     device_kind = device_kind or detect_device_kind()
+    tracer = resolve_tracer(trace)
+    # trial rows land beside the tuning cache by default: one directory
+    # holds everything learned about this machine
+    drift_log = (DriftLog(os.path.join(cache.root, "drift.jsonl"))
+                 if drift is None else resolve_drift(drift))
     # the measured program must BE the compiled program: the compile
     # flags ride in both the search (below) and the cache key, so a
     # config tuned under one regime never serves another
@@ -252,8 +270,17 @@ def tune_graph(graph, backend: str = "pallas", *,
         if cfg in seen or counter["n"] >= max_trials:
             return None
         seen.add(cfg)
-        t = Trial(label, cfg, modeled_s, timed(cfg))
+        with maybe_span(tracer, "tune.trial", cat="tune",
+                        graph=graph.name, label=label) as sp:
+            measured_s = timed(cfg)
+            sp.set(modeled_s=modeled_s, measured_s=measured_s)
+        t = Trial(label, cfg, modeled_s, measured_s)
         trials.append(t)
+        if drift_log is not None:
+            # sig/shapes bind late: set post-canonicalization, below
+            drift_log.record("trial", drift_sig, drift_shapes, backend,
+                             modeled_s, measured_s, label=label,
+                             device=device_kind)
         return t
 
     # ---- analytic baseline: the model's pick, measured first --------
@@ -266,6 +293,9 @@ def tune_graph(graph, backend: str = "pallas", *,
                                    context=context)
     tunable = [i for i, g in enumerate(baseline_sched.groups)
                if not g.is_trivial]
+    drift_sig = baseline_sched.graph.signature()
+    drift_shapes = [list(c.shape)
+                    for c in baseline_sched.graph.graph_inputs]
 
     if not tunable:                      # nothing to search: model wins
         rec = TuningRecord(config=baseline_cfg, source="measured",
@@ -318,6 +348,8 @@ def tune_graph(graph, backend: str = "pallas", *,
                        analytic_measured_s=analytic.measured_s,
                        modeled_s=best.modeled_s, n_trials=counter["n"])
     cache.put(key_post, rec, aliases=(key_pre,))
+    if drift_log is not None:
+        drift_log.flush()       # trial rows persist with the record
     return TuningResult(key_pre, best.config, "measured", trials,
                         counter["n"], rec)
 

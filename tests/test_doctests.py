@@ -14,11 +14,14 @@ import repro.core.compiler
 import repro.core.schedule
 import repro.frontend.ops
 import repro.frontend.tracer
+import repro.obs.drift
+import repro.obs.metrics
 import repro.tune.search
 import repro.tune.store
 
 _MODULES = [repro.core.compiler, repro.core.schedule,
             repro.frontend.ops, repro.frontend.tracer,
+            repro.obs.drift, repro.obs.metrics,
             repro.tune.search, repro.tune.store]
 
 
