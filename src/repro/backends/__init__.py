@@ -1,0 +1,36 @@
+"""Backend abstraction layer: one registry drives lowering, tuning,
+serving, and replication.
+
+The public surface:
+
+- :class:`Backend` — the declarative per-target spec (capabilities,
+  lane/sublane/VMEM constants, ``lower`` and ``measure`` hooks,
+  donation/staging/interpret policies),
+- :func:`register` / :func:`resolve` / :func:`names` /
+  :func:`backends` — the process-global registry,
+- :class:`UnsupportedBackendError` — the single typed rejection,
+- :data:`SEED_BACKENDS` — the lowerable seed trio
+  (``xla``, ``xla_staged``, ``pallas``); ``pallas_gpu`` is registered
+  as a capability-gated stub,
+- :func:`current_platform` — the one device probe shared by the
+  dataflow stack and the LM kernels.
+
+Everything else in the repo resolves a backend here and reads the
+record; see ``docs/backends.md`` for the anatomy and the
+add-a-backend walkthrough.
+"""
+from repro.backends.registry import (backends, get, names, register,
+                                     resolve, unregister,
+                                     use_pallas_kernels)
+from repro.backends.spec import (Backend, STAGE_KINDS,
+                                 UnsupportedBackendError,
+                                 _default_platform as current_platform)
+from repro.backends.seeds import (PALLAS, PALLAS_GPU, SEED_BACKENDS, XLA,
+                                  XLA_STAGED)
+
+__all__ = [
+    "Backend", "UnsupportedBackendError", "STAGE_KINDS",
+    "register", "resolve", "get", "names", "backends", "unregister",
+    "current_platform", "use_pallas_kernels",
+    "XLA", "XLA_STAGED", "PALLAS", "PALLAS_GPU", "SEED_BACKENDS",
+]

@@ -1,0 +1,106 @@
+"""The backend registry: ``register()`` once, ``resolve()`` everywhere.
+
+One process-global table of :class:`~repro.backends.spec.Backend`
+records.  Every subsystem that used to compare backend names —
+lowering, tuning, serving, replication, the LM kernels — now resolves
+a name (or passes a ``Backend`` straight through) and reads the
+declarative record.  Adding a target is a :func:`register` call, not
+a repo-wide grep (see ``docs/backends.md`` for the walkthrough).
+"""
+from __future__ import annotations
+
+import threading
+
+from repro.backends.spec import Backend, UnsupportedBackendError
+
+__all__ = ["register", "resolve", "get", "names", "backends",
+           "unregister", "use_pallas_kernels"]
+
+_lock = threading.Lock()
+_registry: dict[str, Backend] = {}
+
+
+def register(backend: Backend, *, replace: bool = False) -> Backend:
+    """Add ``backend`` to the registry; returns it for chaining.
+
+    Re-registering an existing name is an error unless
+    ``replace=True`` — two subsystems silently fighting over one name
+    is exactly the drift this layer exists to kill.
+    """
+    if not isinstance(backend, Backend):
+        raise TypeError(f"register() takes a Backend, got "
+                        f"{type(backend).__name__}")
+    with _lock:
+        if backend.name in _registry and not replace:
+            raise ValueError(
+                f"backend {backend.name!r} is already registered; pass "
+                f"replace=True to substitute it")
+        _registry[backend.name] = backend
+    return backend
+
+
+def unregister(name: str) -> None:
+    """Remove a backend (tests registering throwaway targets)."""
+    with _lock:
+        _registry.pop(name, None)
+
+
+def resolve(backend) -> Backend:
+    """Normalize a backend argument into a :class:`Backend`.
+
+    Accepts a registered name or a ``Backend`` instance (passed
+    through, registered or not — ad-hoc specs are legal for tests and
+    experiments).  Unknown names raise the typed
+    :class:`UnsupportedBackendError` listing what IS registered.
+    """
+    if isinstance(backend, Backend):
+        return backend
+    if isinstance(backend, str):
+        with _lock:
+            be = _registry.get(backend)
+        if be is not None:
+            return be
+        raise UnsupportedBackendError(
+            f"unknown backend {backend!r}; registered backends: "
+            f"{names()}", backend=str(backend), missing=("registered",))
+    raise UnsupportedBackendError(
+        f"backend must be a name or a Backend spec, got "
+        f"{type(backend).__name__}", missing=("registered",))
+
+
+def get(name: str) -> Backend | None:
+    """The registered backend named ``name``, or ``None``."""
+    with _lock:
+        return _registry.get(name)
+
+
+def names() -> tuple[str, ...]:
+    """Registered backend names, registration order."""
+    with _lock:
+        return tuple(_registry)
+
+
+def use_pallas_kernels(impl: str, *, auto_native: bool = True) -> bool:
+    """Resolve the LM kernels' ``impl=`` knob against the registry.
+
+    ``impl="pallas"`` always selects the Pallas kernels; ``"ref"`` (or
+    any other value) never does; ``"auto"`` asks whether the registered
+    ``pallas`` backend is native on the current platform
+    (:meth:`~repro.backends.spec.Backend.is_native` — the one device
+    probe shared with the dataflow stack, replacing the per-module
+    ``jax.default_backend() == "tpu"`` copies).  ``auto_native=False``
+    restricts to the explicit request — for dispatchers that have a
+    better portable path than the reference oracle (e.g. the chunked
+    XLA attention scan).
+    """
+    if impl == "pallas":
+        return True
+    if impl == "auto" and auto_native:
+        return resolve("pallas").is_native()
+    return False
+
+
+def backends() -> tuple[Backend, ...]:
+    """Every registered backend, registration order."""
+    with _lock:
+        return tuple(_registry.values())

@@ -200,7 +200,12 @@ def build_app(name: str, h: int = 1024, w: int = 1024) -> DataflowGraph:
 
 
 def compile_app(name: str, h: int = 1024, w: int = 1024,
-                backend: str = "pallas", **kw):
-    """Build + compile a Table-I app through the full pass pipeline."""
+                backend="pallas", **kw):
+    """Build + compile a Table-I app through the full pass pipeline.
+
+    ``backend`` is a registered name or a
+    :class:`~repro.backends.Backend` spec, forwarded verbatim to
+    :func:`repro.core.compiler.compile_graph`.
+    """
     from repro.core.compiler import compile_graph
     return compile_graph(build_app(name, h, w), backend=backend, **kw)

@@ -42,28 +42,33 @@ from repro.core.graph import DataflowGraph
 from repro.core.host import CompiledApp, build_host_app
 from repro.core.schedule import Schedule, build_schedule
 from repro.core.transform import Pass, PassPipeline
-from repro.core.vectorize import TPUSpec, V5E
+from repro.core.vectorize import TPUSpec
 from repro.obs.tracer import maybe_span, resolve_tracer
 
 __all__ = ["compile_graph"]
 
 
-def compile_graph(graph: DataflowGraph, backend: str = "pallas", *,
+def compile_graph(graph: DataflowGraph, backend="pallas", *,
                   strict: bool = False, canonicalize: bool = True,
                   passes: Sequence[Pass] | PassPipeline | None = None,
                   mesh: Mesh | None = None,
                   data_axis: str | Sequence[str] = "data",
-                  donate: Sequence[str] = (), spec: TPUSpec = V5E,
+                  donate: Sequence[str] = (), spec: TPUSpec | None = None,
                   vector_factor: int | None = None,
                   max_tile: tuple[int, int] | None = None,
                   tune: Any = None, tune_cache: Any = None,
-                  interpret: bool = True, jit: bool = True,
+                  interpret: bool | None = None, jit: bool = True,
                   trace: Any = None) -> CompiledApp:
     """Compile a dataflow graph end-to-end into a :class:`CompiledApp`.
 
-    One source program, any backend — ``backend`` is one of
-    ``repro.core.fusion.BACKENDS`` (``xla``, ``xla_staged``,
-    ``pallas``).  ``strict=True`` disables the canonicalization
+    One source program, any backend — ``backend`` is a registered name
+    (:func:`repro.backends.names`) or a
+    :class:`~repro.backends.Backend` spec; the resolved record drives
+    the lowering hook, the vectorizer's lane/VMEM constants, and the
+    interpret-vs-compiled decision (``interpret=None`` defers to
+    :meth:`~repro.backends.Backend.resolve_interpret`: compiled on the
+    backend's native platforms, interpreted elsewhere).
+    ``strict=True`` disables the canonicalization
     pipeline and rejects non-canonical graphs exactly like the seed
     validator did; ``passes`` substitutes a custom pass list for the
     default pipeline.  ``mesh``/``data_axis``/``donate`` configure the
@@ -123,15 +128,19 @@ def compile_graph(graph: DataflowGraph, backend: str = "pallas", *,
             "tune= and max_tile= are mutually exclusive: the tile cap is "
             "one of the tuner's search axes (and part of the cached "
             "config); pass max_tile_candidates to tune_graph instead")
+    from repro.backends import resolve
+    be = resolve(backend)
+    spec = spec or be.spec
+    interpret = be.resolve_interpret(interpret)
     tracer = resolve_tracer(trace)
     with maybe_span(tracer, "compile", cat="compile", graph=graph.name,
-                    backend=backend) as top:
+                    backend=be.name) as top:
         tuned = None
         if tune is not None:
             from repro.tune.search import resolve_tuning, tuned_schedule_kwargs
             with maybe_span(tracer, "compile.tune", cat="compile",
                             graph=graph.name):
-                tuned = resolve_tuning(graph, backend, tune=tune, spec=spec,
+                tuned = resolve_tuning(graph, be, tune=tune, spec=spec,
                                        cache=tune_cache, interpret=interpret,
                                        strict=strict, canonicalize=canonicalize,
                                        passes=passes, trace=tracer)
@@ -139,21 +148,22 @@ def compile_graph(graph: DataflowGraph, backend: str = "pallas", *,
             config, source, notes = tuned
             sched: Schedule = build_schedule(
                 graph, canonicalize=canonicalize, strict=strict, passes=passes,
-                trace=tracer, **tuned_schedule_kwargs(config, source, spec))
+                trace=tracer, backend=be,
+                **tuned_schedule_kwargs(config, source, spec))
             sched.diagnostics.extend(notes)
         else:
             sched = build_schedule(
                 graph, canonicalize=canonicalize, strict=strict, passes=passes,
                 spec=spec, vector_factor=vector_factor, max_tile=max_tile,
-                trace=tracer)
+                trace=tracer, backend=be)
         with maybe_span(tracer, "compile.lower", cat="compile",
-                        graph=graph.name, backend=backend):
-            run, sched = lower_graph(sched.graph, backend, schedule=sched,
+                        graph=graph.name, backend=be.name):
+            run, sched = lower_graph(sched.graph, be, schedule=sched,
                                      spec=spec, vector_factor=vector_factor,
                                      interpret=interpret)
         with maybe_span(tracer, "compile.host", cat="compile",
                         graph=graph.name):
-            app = build_host_app(sched, run, backend=backend, mesh=mesh,
+            app = build_host_app(sched, run, backend=be, mesh=mesh,
                                  data_axis=data_axis, donate=donate, jit=jit)
         top.set(kernels=len(sched.groups), stages=len(sched.order))
     return app

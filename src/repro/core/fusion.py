@@ -40,6 +40,9 @@ from repro.core.vectorize import TPUSpec, V5E, select_tile
 
 __all__ = ["lower_group", "lower_graph", "BACKENDS"]
 
+#: the lowerable seed backends (kept as a tuple for the historical
+#: sweep idiom); the authoritative list is the registry
+#: (:func:`repro.backends.names`), which also holds gated stubs
 BACKENDS = ("xla", "xla_staged", "pallas")
 
 
@@ -239,26 +242,31 @@ def _mask_to_image(v, oh: tuple[int, int], i, j, th: int, tw: int,
 # ----------------------------------------------------------------------
 # whole-graph lowering
 # ----------------------------------------------------------------------
-def lower_group(group: FusionGroup, backend: str, spec: TPUSpec = V5E,
+def lower_group(group: FusionGroup, backend, spec: TPUSpec | None = None,
                 vector_factor: int | None = None,
-                interpret: bool = True,
+                interpret: bool | None = None,
                 valid_rows: tuple[int, int] | None = None) -> Callable:
-    # valid_rows applies to trivial groups too: a 2-D custom/reduce
-    # output outside the row band must read as zero downstream
-    # (_window_rows no-ops on non-2-D outputs)
-    if group.is_trivial or backend == "xla":
-        return lower_group_xla(group, staged=False, valid_rows=valid_rows)
-    if backend == "xla_staged":
-        return lower_group_xla(group, staged=True, valid_rows=valid_rows)
-    if backend == "pallas":
-        return lower_group_pallas(group, spec, vector_factor, interpret,
-                                  valid_rows=valid_rows)
-    raise GraphError(f"unknown backend {backend!r}; choose from {BACKENDS}")
+    """Lower one fusion group through the backend registry.
+
+    ``backend`` is a registered name or a
+    :class:`~repro.backends.Backend` spec; the resolved record
+    capability-checks the group's stage kinds, resolves the
+    interpret-vs-compiled mode, and dispatches its ``lower`` hook.
+    ``valid_rows`` applies to trivial groups too: a 2-D custom/reduce
+    output outside the row band must read as zero downstream
+    (``_window_rows`` no-ops on non-2-D outputs).
+    """
+    from repro.backends import resolve
+    be = resolve(backend)
+    return be.lower_group(group, spec=spec, vector_factor=vector_factor,
+                          interpret=interpret, valid_rows=valid_rows)
 
 
-def lower_graph(graph: DataflowGraph, backend: str = "pallas",
-                schedule: Schedule | None = None, spec: TPUSpec = V5E,
-                vector_factor: int | None = None, interpret: bool = True, *,
+def lower_graph(graph: DataflowGraph, backend="pallas",
+                schedule: Schedule | None = None,
+                spec: TPUSpec | None = None,
+                vector_factor: int | None = None,
+                interpret: bool | None = None, *,
                 canonicalize: bool = True, strict: bool = False,
                 max_tile: tuple[int, int] | None = None,
                 valid_rows: tuple[int, int] | None = None,
@@ -267,22 +275,26 @@ def lower_graph(graph: DataflowGraph, backend: str = "pallas",
 
     ``run`` maps ``{input_name: array} -> {output_name: array}`` and is
     jit-compatible.  One source program, any backend — the paper's
-    portability claim (Fig. 8/9) maps to ``backend=`` here.  Unless a
-    pre-built ``schedule`` is passed (the compiler driver and the
-    autotuner both pass one, with tiles already selected and
-    provenance-labeled), the graph first goes through the
-    canonicalization pass pipeline (``strict=True`` to enforce the
-    explicit canonical form instead; see
-    :func:`repro.core.schedule.build_schedule`); ``max_tile`` then
+    portability claim (Fig. 8/9) maps to ``backend=`` here: a
+    registered name or a :class:`~repro.backends.Backend` spec, whose
+    constants also seed the schedule (VMEM budget, tile cap) when no
+    explicit ``spec``/``max_tile`` is passed.  Unless a pre-built
+    ``schedule`` is passed (the compiler driver and the autotuner both
+    pass one, with tiles already selected and provenance-labeled), the
+    graph first goes through the canonicalization pass pipeline
+    (``strict=True`` to enforce the explicit canonical form instead;
+    see :func:`repro.core.schedule.build_schedule`); ``max_tile`` then
     caps the tile shapes the schedule may select.
     """
+    from repro.backends import resolve
+    be = resolve(backend)
     sched = schedule or build_schedule(graph, canonicalize=canonicalize,
                                        strict=strict, spec=spec,
                                        vector_factor=vector_factor,
-                                       max_tile=max_tile)
+                                       max_tile=max_tile, backend=be)
     graph = sched.graph
-    fns = [lower_group(g, backend, spec, vector_factor, interpret,
-                       valid_rows=valid_rows)
+    fns = [be.lower_group(g, spec=spec, vector_factor=vector_factor,
+                          interpret=interpret, valid_rows=valid_rows)
            for g in sched.groups]
 
     def run(inputs: dict[str, Any]) -> dict[str, Any]:

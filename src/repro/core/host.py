@@ -69,7 +69,9 @@ class CompiledApp:
 
     graph: DataflowGraph
     schedule: Schedule
-    backend: str
+    #: the resolved :class:`~repro.backends.Backend` record this app
+    #: was lowered for (``app.backend.name`` for the display string)
+    backend: Any
     fn: Callable                        # jitted: (*inputs) -> tuple(outputs)
     lowered: Any
     compiled: Any
@@ -103,14 +105,18 @@ class CompiledApp:
         Requests whose apps share a signature are interchangeable for
         the micro-batcher (same topology, shapes, stage bodies and
         backend), and repeated compiles of such graphs hit the
-        :class:`repro.runtime.cache.CompileCache`.  Memoized: the
+        :class:`repro.runtime.cache.CompileCache`.  The backend half is
+        :meth:`~repro.backends.Backend.cache_key` — name plus a digest
+        of capabilities and constants — so two registrations under one
+        name with different constants never collide.  Memoized: the
         graph is post-canonicalization and does not change under an
         already-compiled app, and the serving engine calls this on
         every request.
         """
         sig = getattr(self, "_signature", None)
         if sig is None:
-            sig = f"{self.graph.signature()}:{self.backend}"
+            from repro.backends import resolve
+            sig = f"{self.graph.signature()}:{resolve(self.backend).cache_key()}"
             self._signature = sig
         return sig
 
@@ -175,7 +181,7 @@ class CompiledApp:
 
 
 def build_host_app(sched: Schedule, run: Callable,
-                   *, backend: str = "pallas", mesh: Mesh | None = None,
+                   *, backend="pallas", mesh: Mesh | None = None,
                    data_axis: str | Sequence[str] = "data",
                    donate: Sequence[str] = (),
                    jit: bool = True) -> CompiledApp:
@@ -190,6 +196,8 @@ def build_host_app(sched: Schedule, run: Callable,
     per-device HBM shards and transfer concurrently).  Donation lets
     an output reuse an input's HBM.
     """
+    from repro.backends import resolve
+    backend = resolve(backend)
     graph = sched.graph
     input_names = [c.name for c in graph.graph_inputs]
     output_names = [c.name for c in graph.graph_outputs]

@@ -162,13 +162,17 @@ def build_schedule(graph: DataflowGraph, n_bundles: int = 4, *,
                    spec=None, vector_factor: int | None = None,
                    group_vector_factors: Sequence[int | None] | None = None,
                    max_tile: tuple[int, int] | None = None,
-                   tile_source: str = "measured", trace=None) -> Schedule:
+                   tile_source: str = "measured", trace=None,
+                   backend=None) -> Schedule:
     """Canonicalize, validate and partition ``graph`` into fusion groups.
 
     ``strict=True`` skips canonicalization and enforces the paper's
     explicit canonical form (multi-reader channels raise).  ``passes``
     overrides the default pipeline; ``spec`` feeds the VMEM feasibility
-    check of the fusion search (default: TPU v5e).  ``vector_factor``
+    check of the fusion search (default: the resolved ``backend``'s
+    spec, else TPU v5e).  ``backend`` (a name or
+    :class:`~repro.backends.Backend`) supplies the lane/sublane widths
+    and default tile cap the vectorizer budgets with.  ``vector_factor``
     forces one datapath width for every group; ``None`` (the default)
     sweeps the factor per group through the DMA cost model
     (:func:`repro.core.vectorize.select_tile`) and logs the choice in
@@ -204,13 +208,14 @@ def build_schedule(graph: DataflowGraph, n_bundles: int = 4, *,
     with maybe_span(trace, "compile.partition", cat="compile",
                     graph=graph.name, stages=len(order)) as sp:
         groups, fusion_diags = _partition_groups(graph, order, spec,
-                                                 vector_factor)
+                                                 vector_factor,
+                                                 backend=backend)
         sp.set(groups=len(groups))
     diagnostics.extend(fusion_diags)
     diagnostics.extend(_select_tiles(groups, spec, vector_factor,
                                      group_vf=group_vector_factors,
                                      max_tile=max_tile, source=tile_source,
-                                     trace=trace))
+                                     trace=trace, backend=backend))
     bundles = _assign_bundles(graph, n_bundles)
     return Schedule(graph, order, groups, bundles, n_bundles, diagnostics)
 
@@ -219,7 +224,8 @@ def _select_tiles(groups: list[FusionGroup], spec,
                   vector_factor: int | None,
                   group_vf: Sequence[int | None] | None = None,
                   max_tile: tuple[int, int] | None = None,
-                  source: str = "measured", trace=None) -> list[str]:
+                  source: str = "measured", trace=None,
+                  backend=None) -> list[str]:
     """Per-group tile/vector-factor selection (post-partition).
 
     Three modes, in precedence order: ``group_vf`` pins each group
@@ -229,8 +235,7 @@ def _select_tiles(groups: list[FusionGroup], spec,
     per group through the cost model — different plane widths in one
     graph can land on different datapath widths.
     """
-    from repro.core.vectorize import DEFAULT_MAX_TILE, V5E, select_tile
-    max_tile = tuple(max_tile) if max_tile is not None else DEFAULT_MAX_TILE
+    from repro.core.vectorize import select_tile
     diags: list[str] = []
     if group_vf is not None and len(group_vf) != len(groups):
         diags.append(f"[vectorize] tuned config has {len(group_vf)} "
@@ -247,8 +252,8 @@ def _select_tiles(groups: list[FusionGroup], spec,
             forced = group_vf[gi]
             g.tile_source = source
         try:
-            tile, sweep = select_tile(g, spec or V5E, forced, max_tile,
-                                      trace=trace)
+            tile, sweep = select_tile(g, spec, forced, max_tile,
+                                      trace=trace, backend=backend)
         except ValueError:
             # a persistent tuned config can outlive the partitioner or
             # the spec it was measured under (same group count, changed
@@ -261,8 +266,9 @@ def _select_tiles(groups: list[FusionGroup], spec,
                          f"vector_factor={forced} no longer feasible; "
                          f"falling back to the analytic sweep")
             g.tile_source = "model"
-            tile, sweep = select_tile(g, spec or V5E, vector_factor,
-                                      max_tile, trace=trace)
+            tile, sweep = select_tile(g, spec, vector_factor,
+                                      max_tile, trace=trace,
+                                      backend=backend)
         names = ",".join(s.name for s in g.stages)
         if sweep is not None:
             tried = ",".join(
@@ -287,7 +293,8 @@ def _is_fusible(st: Stage) -> bool:
 
 
 def _partition_groups(graph: DataflowGraph, order: list[Stage],
-                      spec=None, vector_factor: int | None = None
+                      spec=None, vector_factor: int | None = None,
+                      backend=None
                       ) -> tuple[list[FusionGroup], list[str]]:
     """Grow maximal convex fusion groups over the stage DAG.
 
@@ -350,10 +357,10 @@ def _partition_groups(graph: DataflowGraph, order: list[Stage],
         # group; in auto-sweep mode the narrowest datapath (vf=1) is
         # the existence check — select_tile widens afterwards.
         if mask not in _fits_cache:
-            from repro.core.vectorize import V5E, choose_tile
+            from repro.core.vectorize import choose_tile
             g = make_group(mask)
             try:
-                choose_tile(g, spec or V5E, vector_factor or 1)
+                choose_tile(g, spec, vector_factor or 1, backend=backend)
                 _fits_cache[mask] = True
             except ValueError:
                 _fits_cache[mask] = False

@@ -35,13 +35,35 @@ __all__ = ["TPUSpec", "choose_tile", "select_tile", "sweep_vector_factor",
            "modeled_plane_time", "modeled_schedule_time", "scale_spec",
            "vmem_report", "DEFAULT_MAX_TILE"]
 
-LANE = 128     # VPU/MXU lane width
+LANE = 128     # VPU/MXU lane width (registry default; see _constants)
 SUBLANE = 8    # float32 sublane rows
 
 #: default (th, tw) cap for choose_tile/select_tile; the autotuner
 #: (:mod:`repro.tune`) searches over alternative caps (the tile-height
 #: axis of the schedule space)
 DEFAULT_MAX_TILE = (256, 1024)
+
+
+def _constants(backend, spec, max_tile) -> tuple:
+    """Resolve (spec, max_tile, lane, sublane) for a tile decision.
+
+    With ``backend`` (a name or :class:`~repro.backends.Backend`), the
+    lane width, sublane rows, VMEM budgets and tile cap come from the
+    resolved record — the single source of per-target constants;
+    explicit ``spec``/``max_tile`` arguments still win.  Without one,
+    the module-level defaults apply (identical values for the seed
+    backends, so legacy call sites are bit-compatible).
+    """
+    if backend is None:
+        return (spec or V5E,
+                tuple(max_tile) if max_tile is not None else DEFAULT_MAX_TILE,
+                LANE, SUBLANE)
+    from repro.backends import resolve
+    be = resolve(backend)
+    return (spec or be.spec,
+            tuple(max_tile) if max_tile is not None
+            else tuple(be.default_max_tile),
+            be.lane, be.sublane)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,50 +84,54 @@ class TPUSpec:
 V5E = TPUSpec()
 
 
-def choose_tile(group: FusionGroup, spec: TPUSpec = V5E,
+def choose_tile(group: FusionGroup, spec: TPUSpec | None = None,
                 vector_factor: int = 1,
-                max_tile: tuple[int, int] = DEFAULT_MAX_TILE) -> tuple[int, int]:
+                max_tile: tuple[int, int] | None = None,
+                backend=None) -> tuple[int, int]:
     """Pick (th, tw) for a fusion group at a fixed vector factor.
 
-    ``tw`` is exactly ``128 * vector_factor`` — the paper's explicit
+    ``tw`` is exactly ``lane * vector_factor`` — the paper's explicit
     vectorization knob sets the datapath width.  ``th`` starts at the
     largest hardware-aligned height ``<= max_tile[0]`` bounded by the
     plane, then shrinks until the double-buffered VMEM budget holds.
+    The lane width, sublane rows, tile cap and VMEM budget come from
+    the resolved ``backend`` (explicit ``spec``/``max_tile`` override).
 
     Raises :class:`ValueError` when the requested factor cannot fit —
-    either because ``128 * vector_factor`` exceeds ``max_tile[1]`` or
+    either because ``lane * vector_factor`` exceeds ``max_tile[1]`` or
     the lane-rounded plane width, or because even the minimal
-    ``(SUBLANE, tw)`` tile blows the VMEM budget.
+    ``(sublane, tw)`` tile blows the VMEM budget.
     """
+    spec, max_tile, lane, sublane = _constants(backend, spec, max_tile)
     if vector_factor < 1:
         raise ValueError(f"vector_factor must be >= 1, got {vector_factor}")
     shape = group.stages[0].outputs[0].shape
     if len(shape) != 2:
         raise ValueError(f"generic fusion tiles 2-D planes, got {shape}")
     H, W = shape
-    tw = LANE * vector_factor
+    tw = lane * vector_factor
     # clamp BEFORE committing to the factor: a tile wider than the
     # lane-rounded plane only streams padding, and max_tile is a hard
     # cap — the old code applied the factor after clamping and silently
     # exceeded both.
-    cap_tw = min(_round_up(W, LANE), max(LANE, (max_tile[1] // LANE) * LANE))
+    cap_tw = min(_round_up(W, lane), max(lane, (max_tile[1] // lane) * lane))
     if tw > cap_tw:
         raise ValueError(
             f"vector_factor={vector_factor} needs a {tw}-lane-wide tile, "
             f"but the widest feasible tile is {cap_tw} "
-            f"(plane width {W} -> {_round_up(W, LANE)} lane-rounded, "
+            f"(plane width {W} -> {_round_up(W, lane)} lane-rounded, "
             f"max_tile[1]={max_tile[1]})")
-    th = min(_round_up(H, SUBLANE),
-             max(SUBLANE, (max_tile[0] // SUBLANE) * SUBLANE))
+    th = min(_round_up(H, sublane),
+             max(sublane, (max_tile[0] // sublane) * sublane))
 
     while group.vmem_bytes((th, tw)) > spec.vmem_bytes:
-        if th > SUBLANE:
-            th = max(SUBLANE, th // 2)
+        if th > sublane:
+            th = max(sublane, th // 2)
         else:
             raise ValueError(
                 f"group {[s.name for s in group.stages]} cannot fit VMEM "
                 f"budget {spec.vmem_bytes} even at minimal tile "
-                f"({SUBLANE}, {tw}) for vector_factor={vector_factor}: "
+                f"({sublane}, {tw}) for vector_factor={vector_factor}: "
                 f"{group.vmem_bytes((th, tw))} bytes")
     group.tile = (th, tw)
     group.vector_factor = vector_factor
@@ -137,10 +163,10 @@ def modeled_plane_time(group: FusionGroup, tile: tuple[int, int],
     return grid * (spec.step_overhead_s + max(dma_s, compute_s))
 
 
-def sweep_vector_factor(group: FusionGroup, spec: TPUSpec = V5E,
-                        max_tile: tuple[int, int] = DEFAULT_MAX_TILE,
+def sweep_vector_factor(group: FusionGroup, spec: TPUSpec | None = None,
+                        max_tile: tuple[int, int] | None = None,
                         candidates: tuple[int, ...] | None = None,
-                        trace=None) -> list[dict]:
+                        trace=None, backend=None) -> list[dict]:
     """Cost-model sweep over vector factors; one record per candidate.
 
     Default candidates run 1..cap (every factor the plane/max_tile can
@@ -151,24 +177,27 @@ def sweep_vector_factor(group: FusionGroup, spec: TPUSpec = V5E,
     ``compile.vectorize.sweep`` span recording how many candidates
     were scored and how many were feasible.
     """
+    spec, max_tile, lane, _ = _constants(backend, spec, max_tile)
     if trace is not None:
         with trace.span("compile.vectorize.sweep", cat="compile",
                         group=",".join(s.name for s in group.stages)) as sp:
-            records = sweep_vector_factor(group, spec, max_tile, candidates)
+            records = sweep_vector_factor(group, spec, max_tile, candidates,
+                                          backend=backend)
             sp.set(candidates=len(records),
                    feasible=sum(1 for r in records if r["feasible"]))
             return records
     shape = group.stages[0].outputs[0].shape
     H, W = shape
-    cap_tw = min(_round_up(W, LANE), max(LANE, (max_tile[1] // LANE) * LANE))
+    cap_tw = min(_round_up(W, lane), max(lane, (max_tile[1] // lane) * lane))
     if candidates is None:
-        candidates = tuple(range(1, cap_tw // LANE + 2))
+        candidates = tuple(range(1, cap_tw // lane + 2))
     records: list[dict] = []
     prev = (group.tile, group.vector_factor)
     try:
         for vf in candidates:
             try:
-                tile = choose_tile(group, spec, vf, max_tile)
+                tile = choose_tile(group, spec, vf, max_tile,
+                                   backend=backend)
             except ValueError as e:
                 records.append({"vector_factor": vf, "feasible": False,
                                 "tile": None, "modeled_s": float("inf"),
@@ -186,10 +215,11 @@ def sweep_vector_factor(group: FusionGroup, spec: TPUSpec = V5E,
     return records
 
 
-def select_tile(group: FusionGroup, spec: TPUSpec = V5E,
+def select_tile(group: FusionGroup, spec: TPUSpec | None = None,
                 vector_factor: int | None = None,
-                max_tile: tuple[int, int] = DEFAULT_MAX_TILE,
-                trace=None) -> tuple[tuple[int, int], list[dict] | None]:
+                max_tile: tuple[int, int] | None = None,
+                trace=None, backend=None,
+                ) -> tuple[tuple[int, int], list[dict] | None]:
     """Pick the group's tile; sweep the vector factor when not forced.
 
     ``vector_factor=None`` runs :func:`sweep_vector_factor` and keeps
@@ -201,8 +231,10 @@ def select_tile(group: FusionGroup, spec: TPUSpec = V5E,
     flight recorder into the sweep.
     """
     if vector_factor is not None:
-        return choose_tile(group, spec, vector_factor, max_tile), None
-    records = sweep_vector_factor(group, spec, max_tile, trace=trace)
+        return choose_tile(group, spec, vector_factor, max_tile,
+                           backend=backend), None
+    records = sweep_vector_factor(group, spec, max_tile, trace=trace,
+                                  backend=backend)
     feasible = [r for r in records if r["feasible"]]
     if not feasible:
         raise ValueError(

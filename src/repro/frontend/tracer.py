@@ -833,9 +833,24 @@ class DataflowFunction:
             v = kwargs[k]
             if not isinstance(v, (str, int, float, bool, bytes, tuple,
                                   type(None))):
-                if all(v is not p for p in self._pinned):
-                    self._pinned.append(v)
-                v = f"id{id(v)}"
+                # values with a stable structural identity key by it —
+                # a Backend's cache_key() or a ScheduleConfig's JSON —
+                # so equal-by-value instances share one compiled app
+                ck = getattr(v, "cache_key", None)
+                tj = getattr(v, "to_json", None)
+                if callable(ck):
+                    v = f"{type(v).__name__}:{ck()}"
+                elif callable(tj):
+                    try:
+                        import json
+                        v = type(v).__name__ + json.dumps(tj(),
+                                                          sort_keys=True)
+                    except (TypeError, ValueError):
+                        tj = None
+                if not isinstance(v, str):
+                    if all(v is not p for p in self._pinned):
+                        self._pinned.append(v)
+                    v = f"id{id(v)}"
             out.append((k, v))
         return tuple(out)
 

@@ -15,9 +15,9 @@ never a code change — the FLOWER single-source promise.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
+from repro.backends import use_pallas_kernels as _use_pallas
 from repro.kernels import ref as _ref
 from repro.kernels.decode_attention import decode_attention as _decode_pallas
 from repro.kernels.flash_attention import flash_attention as _flash_pallas
@@ -29,18 +29,10 @@ __all__ = ["attention", "decode_attention", "mlp", "ssd", "rmsnorm"]
 #: flip to False when running on real TPU hardware
 INTERPRET = True
 
-
-def _on_tpu() -> bool:
-    try:
-        return jax.default_backend() == "tpu"
-    except Exception:  # pragma: no cover
-        return False
-
-
-def _resolve(impl: str) -> str:
-    if impl == "auto":
-        return "pallas" if _on_tpu() else "ref"
-    return impl
+# impl= resolution ("pallas" | "ref" | "auto") lives in the backend
+# registry (repro.backends.use_pallas_kernels): "auto" asks whether the
+# registered pallas backend is native on this platform — the same
+# device probe the dataflow stack uses, instead of a local copy.
 
 
 def rmsnorm(x, w, eps: float = 1e-6):
@@ -50,7 +42,7 @@ def rmsnorm(x, w, eps: float = 1e-6):
 def attention(q, k, v, bias=None, causal=True, impl: str = "auto",
               block_q: int = 128, block_k: int = 128, scale=None):
     """q: (B, Hq, Sq, Dk); k: (B, Hkv, Sk, Dk); v: (B, Hkv, Sk, Dv)."""
-    if _resolve(impl) == "pallas":
+    if _use_pallas(impl):
         return _flash_pallas(q, k, v, bias=bias, causal=causal,
                              block_q=block_q, block_k=block_k, scale=scale,
                              interpret=INTERPRET)
@@ -61,7 +53,7 @@ def attention(q, k, v, bias=None, causal=True, impl: str = "auto",
 def decode_attention(q, k, v, bias=None, impl: str = "auto",
                      block_k: int = 512, scale=None):
     """q: (B, Hq, Dk); k: (B, Hkv, S, Dk); v: (B, Hkv, S, Dv)."""
-    if _resolve(impl) == "pallas":
+    if _use_pallas(impl):
         return _decode_pallas(q, k, v, bias=bias, block_k=block_k,
                               scale=scale, interpret=INTERPRET)
     return _ref.decode_attention_ref(q, k, v, bias=bias, scale=scale)
@@ -72,7 +64,7 @@ def mlp(x, w_norm, w_gate, w_up, w_down, eps: float = 1e-6,
     """Fused rmsnorm+SwiGLU.  x: (..., d) (leading dims flattened)."""
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
-    if _resolve(impl) == "pallas":
+    if _use_pallas(impl):
         y = _mlp_pallas(x2, w_norm, w_gate, w_up, w_down, eps=eps,
                         block_t=block_t, block_f=block_f,
                         interpret=INTERPRET)
@@ -95,7 +87,7 @@ def ssd(x, dt, A, B, C, chunk: int = 64, impl: str = "auto",
         dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
         B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
         C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
-    if _resolve(impl) == "pallas":
+    if _use_pallas(impl):
         if init_state is not None:  # kernel starts from zero state
             raise NotImplementedError(
                 "pallas ssd_scan does not take init_state; use impl='ref' "

@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.backends import use_pallas_kernels
 from repro.kernels import ops
 from repro.models.config import ModelConfig
 
@@ -143,9 +144,12 @@ def attention_xla(q, k, v, bias=None, causal=True, chunk: int = 0,
     """Dispatch: Pallas flash kernel, chunked-scan XLA (same dataflow,
     lowerable on any backend), or naive reference."""
     Sk = k.shape[2]
-    if impl == "pallas":
+    # auto_native=False: only an EXPLICIT pallas request takes the
+    # kernel path here — "auto" prefers the chunked XLA scan below,
+    # which is portable and structurally the same dataflow
+    if use_pallas_kernels(impl, auto_native=False):
         return ops.attention(q, k, v, bias=bias, causal=causal,
-                             impl="pallas", scale=scale)
+                             impl=impl, scale=scale)
     if chunk and Sk > chunk:
         return _chunked_attention(q, k, v, bias, causal, chunk, scale,
                                   unroll)

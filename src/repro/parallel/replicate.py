@@ -23,6 +23,7 @@ CI on CPU exercises replication without a multi-chip host.
 from __future__ import annotations
 
 import dataclasses
+import inspect
 from typing import Any, Callable
 
 import jax
@@ -30,6 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.backends import resolve
 from repro.core.fusion import lower_graph
 from repro.core.graph import Channel, DataflowGraph, GraphError
 from repro.core.host import CompiledApp, LaunchHandle
@@ -38,7 +40,45 @@ from repro.parallel._compat import shard_map
 from repro.parallel.collectives import halo_exchange_rows
 from repro.parallel.sharding import replica_mesh
 
-__all__ = ["ReplicatedApp", "replicate_app", "graph_input_halo"]
+__all__ = ["ReplicatedApp", "replicate_app", "graph_input_halo",
+           "replication_kwarg_routing", "UNROUTED_COMPILE_KWARGS"]
+
+#: ``compile_graph`` knobs replication deliberately does NOT forward:
+#: the shard_map launcher replaces the generated host launcher (mesh /
+#: data_axis / donate / jit), and tracing is engine-level plumbing.
+#: Everything else in ``compile_graph``'s signature must route into the
+#: scheduler or the lowering — ``replication_kwarg_routing`` derives
+#: that split from the live signatures, and a regression test asserts
+#: full coverage so a NEW compile kwarg cannot be silently dropped.
+UNROUTED_COMPILE_KWARGS = frozenset(
+    {"mesh", "data_axis", "donate", "jit", "trace"})
+
+#: kwargs consumed by the tuning resolution step itself (not by the
+#: scheduler/lowering signatures)
+_TUNE_KWARGS = frozenset({"tune", "tune_cache"})
+
+
+def replication_kwarg_routing() -> tuple[frozenset, frozenset, frozenset]:
+    """Derive ``(known, sched, lower)`` kwarg sets from live signatures.
+
+    ``known`` is every ``compile_graph`` keyword ``replicate_app``
+    accepts; ``sched``/``lower`` are the subsets forwarded to
+    :func:`~repro.core.schedule.build_schedule` and
+    :func:`~repro.core.fusion.lower_graph`.  Derived — not
+    hand-maintained — so the three callables cannot drift apart; the
+    companion invariant (``known | UNROUTED_COMPILE_KWARGS`` covers
+    ``compile_graph``'s whole signature) is enforced by
+    ``tests/test_backends.py``.
+    """
+    from repro.core.compiler import compile_graph
+    all_kwargs = frozenset(
+        inspect.signature(compile_graph).parameters) - {"graph", "backend"}
+    routable = all_kwargs - UNROUTED_COMPILE_KWARGS - _TUNE_KWARGS
+    sched = routable & frozenset(
+        inspect.signature(build_schedule).parameters)
+    lower = routable & frozenset(
+        inspect.signature(lower_graph).parameters)
+    return sched | lower | _TUNE_KWARGS, sched, lower
 
 
 def graph_input_halo(graph: DataflowGraph) -> dict[Channel, tuple[int, int]]:
@@ -126,7 +166,7 @@ class ReplicatedApp:
 
 def replicate_app(source: DataflowGraph | CompiledApp,
                   n_replicas: int | None = None, *,
-                  backend: str | None = None, axis: str = "replica",
+                  backend=None, axis: str = "replica",
                   devices: list | None = None,
                   **compile_kwargs: Any) -> ReplicatedApp:
     """Replicate a dataflow app across devices by row-partitioning.
@@ -148,10 +188,11 @@ def replicate_app(source: DataflowGraph | CompiledApp,
     """
     if isinstance(source, CompiledApp):
         graph = source.schedule.graph
-        backend = backend or source.backend
+        backend = resolve(backend or source.backend)
     else:
         graph = source
-        backend = backend or "pallas"
+        backend = resolve(backend or "pallas")
+    backend.require("replication")
 
     shapes = {ch.shape for ch in graph.channels}
     if len(shapes) != 1 or len(next(iter(shapes))) != 2:
@@ -183,17 +224,15 @@ def replicate_app(source: DataflowGraph | CompiledApp,
             f"cumulative stencil halo ({hy} rows) does not fit a "
             f"{h_local}-row shard; use fewer replicas")
 
-    known = {"canonicalize", "strict", "passes", "spec", "vector_factor",
-             "interpret", "tune", "tune_cache", "max_tile"}
+    known, sched_names, lower_names = replication_kwarg_routing()
     unknown = set(compile_kwargs) - known
     if unknown:
         raise TypeError(f"replicate_app got unsupported compile kwargs "
                         f"{sorted(unknown)}; supported: {sorted(known)}")
     sched_kwargs = {kw: v for kw, v in compile_kwargs.items()
-                    if kw in ("canonicalize", "strict", "passes", "spec",
-                              "vector_factor", "max_tile")}
+                    if kw in sched_names}
     lower_kwargs = {kw: v for kw, v in compile_kwargs.items()
-                    if kw in ("spec", "vector_factor", "interpret")}
+                    if kw in lower_names}
 
     he = h_local + 2 * hy
     clone = _clone_with_height(graph, he)
@@ -211,20 +250,20 @@ def replicate_app(source: DataflowGraph | CompiledApp,
             raise TypeError("tune= and max_tile= are mutually exclusive "
                             "in replicate_app: the tile cap is one of "
                             "the tuner's search axes")
-        from repro.core.vectorize import V5E
         from repro.tune.search import resolve_tuning, tuned_schedule_kwargs
-        spec = compile_kwargs.get("spec") or V5E
+        spec = compile_kwargs.get("spec") or backend.spec
         tuned = resolve_tuning(
             clone, backend, tune=tune, spec=spec,
             cache=compile_kwargs.get("tune_cache"),
-            interpret=compile_kwargs.get("interpret", True),
+            interpret=backend.resolve_interpret(
+                compile_kwargs.get("interpret")),
             strict=compile_kwargs.get("strict", False),
             canonicalize=compile_kwargs.get("canonicalize", True),
             passes=compile_kwargs.get("passes"))
         if tuned is not None:
             config, source, notes = tuned
             sched_kwargs.update(tuned_schedule_kwargs(config, source, spec))
-    sched = build_schedule(clone, **sched_kwargs)
+    sched = build_schedule(clone, backend=backend, **sched_kwargs)
     sched.diagnostics.extend(notes)
     input_names = [c.name for c in sched.graph.graph_inputs]
     output_names = [c.name for c in sched.graph.graph_outputs]

@@ -61,7 +61,7 @@ class MicroBatcher:
     def __init__(self, max_batch: int = 8, donate: bool = True,
                  replicas: int = 1, replica_axis: str = "replica",
                  devices: list | None = None, staging_depth: int = 2,
-                 trace: Any = None):
+                 trace: Any = None, backend=None):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         if replicas < 1:
@@ -80,13 +80,21 @@ class MicroBatcher:
         self.replica_axis = replica_axis
         # donation is categorically ignored on CPU (XLA warns on every
         # call); resolve it per-platform up front so CPU never builds a
-        # donating entry — swapping the entry later would recompile it
+        # donating entry — swapping the entry later would recompile it.
+        # The decision itself is the backend's donation policy
+        # (Backend.resolve_donate); the registry default reproduces the
+        # old inline probe bit-for-bit.
         try:
             plat = ((devices[0] if devices else jax.devices()[0])
                     .platform)
         except Exception:
             plat = "cpu"
-        self._donate = donate and plat != "cpu"
+        from repro.backends import resolve
+        self.backend = resolve(backend) if backend is not None else None
+        if self.backend is not None:
+            self._donate = self.backend.resolve_donate(donate, plat)
+        else:
+            self._donate = donate and plat != "cpu"
         #: how many launches of one (sig, width) bucket get distinct
         #: staging buffers before the first is rewritten; keep STRICTLY
         #: greater than the number of concurrently unforced launches —

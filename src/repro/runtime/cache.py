@@ -34,6 +34,7 @@ import weakref
 from collections import OrderedDict
 from typing import Any, Callable
 
+from repro.backends import resolve
 from repro.core.compiler import compile_graph
 from repro.core.graph import DataflowGraph
 from repro.core.host import CompiledApp
@@ -148,19 +149,27 @@ class CompileCache:
         return len(self._entries)
 
     @staticmethod
-    def _key(sig: str, backend: str, opts: dict[str, Any]) -> tuple:
-        return (sig, backend, tuple(sorted((k, _opt_repr(v))
-                                           for k, v in opts.items())))
+    def _key(sig: str, backend_key: str, opts: dict[str, Any]) -> tuple:
+        return (sig, backend_key, tuple(sorted((k, _opt_repr(v))
+                                               for k, v in opts.items())))
 
-    def get(self, graph: DataflowGraph, backend: str = "pallas",
+    def get(self, graph: DataflowGraph, backend="pallas",
             **compile_kwargs: Any) -> CompiledApp:
-        """Return a compiled app for ``graph``, tracing at most once."""
+        """Return a compiled app for ``graph``, tracing at most once.
+
+        ``backend`` is a registered name or a
+        :class:`~repro.backends.Backend`; the entry is keyed by the
+        resolved record's :meth:`~repro.backends.Backend.cache_key`
+        (name + digest of capabilities and constants), so re-registering
+        a name with different constants never serves stale kernels.
+        """
+        backend = resolve(backend)
         # ``trace`` is observability plumbing, not a compile option: a
         # Tracer's repr is identity-based, so keying it would split the
         # cache per tracer instance for semantically identical compiles
         trace = compile_kwargs.pop("trace", None)
-        okey = (backend, tuple(sorted((k, _opt_repr(v))
-                                      for k, v in compile_kwargs.items())))
+        okey = (backend.cache_key(), tuple(sorted((k, _opt_repr(v))
+                                           for k, v in compile_kwargs.items())))
         with self._lock:
             self.stats.requests += 1
             per = self._by_graph.get(graph)
@@ -176,7 +185,7 @@ class CompileCache:
             return self._get_slow(graph, okey, backend, compile_kwargs,
                                   trace=trace)
 
-    def _get_slow(self, graph: DataflowGraph, okey: tuple, backend: str,
+    def _get_slow(self, graph: DataflowGraph, okey: tuple, backend,
                   compile_kwargs: dict[str, Any],
                   trace: Any = None) -> CompiledApp:
         """Signature lookup / trace under the per-graph-object lock."""
@@ -184,7 +193,8 @@ class CompileCache:
             per = self._by_graph.get(graph)
             if per is not None and okey in per:   # a peer just filled it
                 return per[okey]     # same object: same compile event
-            key = self._key(graph.signature(), backend, compile_kwargs)
+            key = self._key(graph.signature(), backend.cache_key(),
+                            compile_kwargs)
             app = self._entries.get(key)
             if app is not None:
                 self._entries.move_to_end(key)
@@ -218,7 +228,8 @@ class CompileCache:
         with self._lock:
             self._entries[key] = app
             # alias: the canonicalized graph's signature (module doc)
-            canon = self._key(app.graph.signature(), backend, compile_kwargs)
+            canon = self._key(app.graph.signature(), backend.cache_key(),
+                              compile_kwargs)
             self._entries.setdefault(canon, app)
             while len(self._entries) > self.maxsize:
                 self._entries.popitem(last=False)

@@ -254,7 +254,7 @@ class StreamEngine:
     which regime a serving schedule came from.
     """
 
-    def __init__(self, *, backend: str = "pallas", max_queue: int = 64,
+    def __init__(self, *, backend="pallas", max_queue: int = 64,
                  max_batch: int = 8, inflight: int = 2, donate: bool = True,
                  replicas: int = 1,
                  cache: CompileCache | None = None,
@@ -266,7 +266,11 @@ class StreamEngine:
                  max_pending: int | None = None,
                  autostart: bool = True, trace: Any = None,
                  drift: Any = None, **compile_kwargs: Any):
-        self.backend = backend
+        from repro.backends import resolve
+        #: the resolved Backend record: its donation policy and staging
+        #: slack configure the MicroBatcher, its cache_key() keys every
+        #: compile below
+        self.backend = resolve(backend)
         self.max_queue = max_queue
         self.max_batch = max_batch
         self.max_pending = max_pending
@@ -295,12 +299,16 @@ class StreamEngine:
         # the oldest slot is retired, so `inflight` launches can be
         # unforced while the next one stages — and on CPU a jit call
         # zero-copy aliases the numpy staging buffer, so rewriting a
-        # rotation corrupts any in-flight batch still reading it
+        # rotation corrupts any in-flight batch still reading it.
+        # The slack above `inflight` is the backend's staging policy
+        # (Backend.staging_depth; seed backends keep the historical +1).
         self._batcher = MicroBatcher(max_batch=max_batch, donate=donate,
                                      replicas=replicas,
-                                     staging_depth=inflight + 1,
+                                     staging_depth=self.backend
+                                     .staging_depth(inflight),
                                      trace=self.tracer
-                                     if self.tracer is not None else False)
+                                     if self.tracer is not None else False,
+                                     backend=self.backend)
         self._apps: dict[str, CompiledApp] = {}
         self._io_specs: dict[str, list[tuple[str, tuple]]] = {}
         self._form_obs: dict[str, Any] = {}   # worker-only scratch
@@ -747,7 +755,7 @@ class StreamEngine:
             self.drift.record(
                 kind, sig,
                 [list(shape) for _n, shape in self._io_specs.get(sig, [])],
-                self.backend, modeled * width, svc,
+                self.backend.name, modeled * width, svc,
                 app=app.graph.name, width=width, batch=len(batch))
 
     def _wait_for_work(self) -> None:

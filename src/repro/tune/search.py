@@ -135,8 +135,9 @@ def _tuning_context(spec: TPUSpec, strict: bool, canonicalize: bool,
     return hashlib.sha256(blob.encode()).hexdigest()[:12]
 
 
-def default_measure(graph, backend: str, config: ScheduleConfig, *,
-                    spec: TPUSpec = V5E, reps: int = 3, interpret: bool = True,
+def default_measure(graph, backend, config: ScheduleConfig, *,
+                    spec: TPUSpec | None = None, reps: int = 3,
+                    interpret: bool = True,
                     seed: int = 0, strict: bool = False,
                     canonicalize: bool = True, passes=None) -> float:
     """Lower ``graph`` under ``config`` and time it on the live backend.
@@ -148,8 +149,10 @@ def default_measure(graph, backend: str, config: ScheduleConfig, *,
     standard autotuning estimator: min is robust to scheduler noise
     where mean is not.
     """
+    from repro.backends import resolve
     from repro.core.compiler import compile_graph
-    app = compile_graph(graph, backend, tune=config, spec=spec,
+    be = resolve(backend)
+    app = compile_graph(graph, be, tune=config, spec=spec or be.spec,
                         interpret=interpret, strict=strict,
                         canonicalize=canonicalize, passes=passes)
     rng = np.random.default_rng(seed)
@@ -192,8 +195,9 @@ def _modeled_for(graph, cfg: ScheduleConfig, spec: TPUSpec,
     return modeled_schedule_time(sched, spec)
 
 
-def tune_graph(graph, backend: str = "pallas", *,
-               spec: TPUSpec = V5E, cache: TuningCache | None = None,
+def tune_graph(graph, backend="pallas", *,
+               spec: TPUSpec | None = None,
+               cache: TuningCache | None = None,
                device_kind: str | None = None, top_k: int = 3,
                max_trials: int = 12, reps: int = 3,
                measure: Callable[[ScheduleConfig], float] | None = None,
@@ -227,6 +231,10 @@ def tune_graph(graph, backend: str = "pallas", *,
     rows, ``drift=`` a :class:`~repro.obs.drift.DriftLog`/path
     redirects them.
     """
+    from repro.backends import resolve
+    be = resolve(backend)
+    be.require("tuning")
+    spec = spec or be.spec
     # NOT `cache or ...`: an empty TuningCache is falsy (__len__ == 0)
     # and must still be used, not silently swapped for the default root
     cache = cache if cache is not None else TuningCache()
@@ -238,11 +246,12 @@ def tune_graph(graph, backend: str = "pallas", *,
                  if drift is None else resolve_drift(drift))
     # the measured program must BE the compiled program: the compile
     # flags ride in both the search (below) and the cache key, so a
-    # config tuned under one regime never serves another
+    # config tuned under one regime never serves another — and the
+    # backend rides along so the scheduler budgets with ITS constants
     build_kwargs = dict(strict=strict, canonicalize=canonicalize,
-                        passes=passes)
+                        passes=passes, backend=be)
     context = _tuning_context(spec, strict, canonicalize, passes)
-    key_pre = TuningKey.for_graph(graph, backend, device_kind,
+    key_pre = TuningKey.for_graph(graph, be, device_kind,
                                   interpret=interpret, context=context)
     if not force:
         rec = cache.get(key_pre)
@@ -251,11 +260,15 @@ def tune_graph(graph, backend: str = "pallas", *,
 
     counter = {"n": 0}
     if measure is None:
+        # the backend's measurement hook is the harness; the seeds all
+        # point it at default_measure (lower + time on the live device)
+        hook = be.measure if be.measure is not None else default_measure
+
         def measure(cfg: ScheduleConfig, _g=graph) -> float:
-            return default_measure(_g, backend, cfg, spec=spec, reps=reps,
-                                   interpret=interpret, seed=seed,
-                                   strict=strict, canonicalize=canonicalize,
-                                   passes=passes)
+            return hook(_g, be, cfg, spec=spec, reps=reps,
+                        interpret=interpret, seed=seed,
+                        strict=strict, canonicalize=canonicalize,
+                        passes=passes)
     user_measure = measure
 
     def timed(cfg: ScheduleConfig) -> float:
@@ -278,7 +291,7 @@ def tune_graph(graph, backend: str = "pallas", *,
         trials.append(t)
         if drift_log is not None:
             # sig/shapes bind late: set post-canonicalization, below
-            drift_log.record("trial", drift_sig, drift_shapes, backend,
+            drift_log.record("trial", drift_sig, drift_shapes, be.name,
                              modeled_s, measured_s, label=label,
                              device=device_kind)
         return t
@@ -288,7 +301,7 @@ def tune_graph(graph, backend: str = "pallas", *,
         graph, spec, tuple(max_tile_candidates[0]), 1.0, build_kwargs)
     # canonicalization may have rewritten the graph in place: alias the
     # post-canonicalization signature so either form hits later
-    key_post = TuningKey.for_graph(baseline_sched.graph, backend,
+    key_post = TuningKey.for_graph(baseline_sched.graph, be,
                                    device_kind, interpret=interpret,
                                    context=context)
     tunable = [i for i, g in enumerate(baseline_sched.groups)
@@ -312,7 +325,8 @@ def tune_graph(graph, backend: str = "pallas", *,
     for gi in tunable:
         group = baseline_sched.groups[gi]
         records = sweep_vector_factor(group, spec,
-                                      max_tile=baseline_cfg.max_tile)
+                                      max_tile=baseline_cfg.max_tile,
+                                      backend=be)
         feasible = sorted((r for r in records if r["feasible"]),
                           key=lambda r: r["modeled_s"])
         for r in feasible[:top_k]:
@@ -354,8 +368,9 @@ def tune_graph(graph, backend: str = "pallas", *,
                         counter["n"], rec)
 
 
-def resolve_tuning(graph, backend: str, *, tune: Any,
-                   spec: TPUSpec = V5E, cache: TuningCache | None = None,
+def resolve_tuning(graph, backend, *, tune: Any,
+                   spec: TPUSpec | None = None,
+                   cache: TuningCache | None = None,
                    interpret: bool = True,
                    **tune_kwargs: Any) -> tuple[ScheduleConfig, str,
                                                 list[str]] | None:

@@ -97,6 +97,12 @@ class TuningKey:
     measurement means (the TPUSpec's constants, strict/canonicalize
     compile flags): configs tuned under one context are invisible to
     compiles running under another.
+
+    ``backend`` is the resolved record's
+    :meth:`~repro.backends.Backend.cache_key` — ``name@digest`` over
+    its capabilities and constants — so a re-registered backend with
+    different lane/VMEM constants invalidates old winners instead of
+    silently serving schedules measured under other budgets.
     """
 
     signature: str
@@ -107,16 +113,18 @@ class TuningKey:
     context: str = ""
 
     @classmethod
-    def for_graph(cls, graph, backend: str,
+    def for_graph(cls, graph, backend,
                   device_kind: str | None = None, *,
                   interpret: bool = True,
                   context: str = "") -> "TuningKey":
+        from repro.backends import resolve
+        backend_key = resolve(backend).cache_key()
         if device_kind is None:
             device_kind = detect_device_kind()
         import numpy as np
         shapes = tuple((c.name, tuple(c.shape), np.dtype(c.dtype).name)
                        for c in graph.graph_inputs)
-        return cls(graph.signature(), backend, device_kind, shapes,
+        return cls(graph.signature(), backend_key, device_kind, shapes,
                    "interpret" if interpret else "compiled", context)
 
     def digest(self) -> str:
