@@ -48,41 +48,56 @@ def _time_call(fn, reps: int) -> float:
 
 def vf_rows(smoke: bool) -> list[dict]:
     from repro.obs.drift import DriftLog, drift_report
+    from repro.tune.calibrate import calibrate
 
-    h, w = (96, 256) if smoke else (256, 640)
+    # a ladder of shapes, not one: the calibration fit needs rows where
+    # the grid-step count and the padded element count move separately,
+    # or step overhead and per-element cost are not identifiable
+    shapes = ([(96, 256), (64, 512), (64, 1024)] if smoke
+              else [(256, 640), (64, 1024), (256, 1024), (128, 2048)])
+    h, w = shapes[0]
     reps = 2 if smoke else 5
     rng = np.random.default_rng(0)
-    x = rng.normal(size=(h, w)).astype(np.float32)
 
-    sched = build_schedule(build_app(_APP, h, w))
-    records = sweep_vector_factor(sched.groups[0])
-    sig = sched.graph.signature()
     # every (modeled, measured) pair from the sweep goes to the on-disk
-    # drift log; drift_report() over them is the cost model's report
-    # card (rank correlation + bias) — see docs/observability.md
-    drift = DriftLog(os.path.join(_ROOT, "experiments",
-                                  "bench_parallel_drift.jsonl"))
+    # drift log — with the cost-model features behind each modeled time
+    # — so drift_report() is the model's report card and calibrate()
+    # can refit its constants; $REPRO_DRIFT_LOG redirects (CI does)
+    drift = DriftLog(os.environ.get("REPRO_DRIFT_LOG", "").strip()
+                     or os.path.join(_ROOT, "experiments",
+                                     "bench_parallel_drift.jsonl"))
 
     rows = []
-    baseline = None
-    for rec in records:
-        if not rec["feasible"]:
-            continue
-        vf = rec["vector_factor"]
-        app = compile_graph(build_app(_APP, h, w), backend="pallas",
-                            vector_factor=vf)
-        out = np.asarray(app(img=x)["out"])
-        if baseline is None:
-            baseline = out
-        assert np.array_equal(out, baseline), f"vf={vf} changed bits"
-        us = _time_call(lambda: np.asarray(app(img=x)["out"]), reps)
-        drift.record("vf_sweep", sig, [[h, w]], "pallas",
-                     rec["modeled_s"], us / 1e6, vector_factor=vf,
-                     tile=list(rec["tile"]), app=_APP)
-        rows.append({"name": f"parallel_vf{vf}", "us": us,
-                     "vector_factor": vf, "tile": rec["tile"],
-                     "modeled_us": rec["modeled_s"] * 1e6,
-                     "h": h, "w": w, "app": _APP})
+    primary_records = None
+    for hh, ww in shapes:
+        x = rng.normal(size=(hh, ww)).astype(np.float32)
+        sched = build_schedule(build_app(_APP, hh, ww))
+        records = sweep_vector_factor(sched.groups[0])
+        if primary_records is None:
+            primary_records = records
+        sig = sched.graph.signature()
+        baseline = None
+        for rec in records:
+            if not rec["feasible"]:
+                continue
+            vf = rec["vector_factor"]
+            app = compile_graph(build_app(_APP, hh, ww), backend="pallas",
+                                vector_factor=vf)
+            out = np.asarray(app(img=x)["out"])
+            if baseline is None:
+                baseline = out
+            assert np.array_equal(out, baseline), f"vf={vf} changed bits"
+            us = _time_call(lambda: np.asarray(app(img=x)["out"]), reps)
+            drift.record("vf_sweep", sig, [[hh, ww]], "pallas",
+                         rec["modeled_s"], us / 1e6, vector_factor=vf,
+                         tile=list(rec["tile"]), app=_APP,
+                         features={"groups": [rec["features"]]})
+            name = (f"parallel_vf{vf}" if (hh, ww) == (h, w)
+                    else f"parallel_vf{vf}_{hh}x{ww}")
+            rows.append({"name": name, "us": us,
+                         "vector_factor": vf, "tile": rec["tile"],
+                         "modeled_us": rec["modeled_s"] * 1e6,
+                         "h": hh, "w": ww, "app": _APP})
     drift.flush()
     report = drift_report(drift)
     auto = build_schedule(build_app(_APP, h, w)).groups[0]
@@ -94,8 +109,31 @@ def vf_rows(smoke: bool) -> list[dict]:
                  "drift_log": drift.path,
                  "sweep": [{k: r[k] for k in
                             ("vector_factor", "feasible", "modeled_s")}
-                           for r in records]})
+                           for r in primary_records]})
+    rows.append(calibration_row(drift, report, calibrate, drift_report))
     return rows
+
+
+def calibration_row(drift, report, calibrate, drift_report) -> dict:
+    """Fit the cost model from the accumulated drift log and report the
+    before/after rank correlation — ROADMAP item 3's exit criterion as
+    a benchmark row."""
+    result = calibrate(drift)
+    row = {"name": "parallel_calibration", "us": 0.0,
+           "fitted": result.fitted, "n_rows": result.n_rows,
+           "seed_spearman": report["spearman"],
+           "seed_bias": report["bias"]}
+    if result.fitted:
+        after = drift_report(drift, spec=result.spec)["with_spec"]
+        s = result.spec
+        row.update({"fitted_spearman": after["spearman"],
+                    "fitted_bias": after["bias"],
+                    "clock_hz": s.clock_hz, "hbm_bw": s.hbm_bw,
+                    "step_overhead_s": s.step_overhead_s,
+                    "ii_scale": [list(p) for p in s.ii_scale]})
+    else:
+        row["warning"] = result.warning
+    return row
 
 
 _REPLICA_SUB = r"""

@@ -120,7 +120,46 @@ def app_rows(name: str, h: int, w: int, reps: int,
     a = np.asarray(analytic_app(img=x)["out"])
     b = np.asarray(tuned_app(img=x)["out"])
     assert np.array_equal(a, b), f"{name}: tuned changed bits"
+
+    rows.append(calibrated_row(name, h, w, reps, result))
     return rows
+
+
+def calibrated_row(name: str, h: int, w: int, reps: int,
+                   uncal) -> dict:
+    """Re-run the search under a calibrated prior and report the pruning.
+
+    The prior comes from the checked-in golden drift fixture (the same
+    rows ``tests/test_calibration.py`` pins), so this bench demonstrates
+    the full loop: drift log -> fitted constants -> fewer measurements.
+    The search must never measure *more* than the uncalibrated one; the
+    hard strictly-fewer/same-winner property is asserted with an
+    injected measure fn in the test suite, not here, because live
+    timings can legitimately reorder near-tied candidates.
+    """
+    from repro.obs.drift import DriftRow
+    from repro.tune.calibrate import calibrate
+
+    fix = os.path.join(_ROOT, "tests", "fixtures",
+                       "drift_bench_parallel.jsonl")
+    with open(fix) as f:
+        drift = [DriftRow.from_dict(json.loads(line)) for line in f]
+    spec = calibrate(drift).spec
+    with tempfile.TemporaryDirectory() as root:
+        res = tune_graph(build_app(name, h, w), _BACKEND,
+                         cache=TuningCache(root), reps=reps,
+                         calibrate=spec)
+    assert res.source == "measured", res.source
+    assert res.n_measurements <= uncal.n_measurements, \
+        (res.n_measurements, uncal.n_measurements)
+    return {"name": f"tuning_{name}_calibrated", "app": name, "us": 0.0,
+            "source": "measured+prior", "h": h, "w": w,
+            "config": res.config.to_json(),
+            "n_measurements": res.n_measurements,
+            "n_pruned": res.n_pruned,
+            "uncalibrated_n_measurements": uncal.n_measurements,
+            "same_winner": res.config == uncal.config,
+            "search_best_us": res.record.best_measured_s * 1e6}
 
 
 def run(smoke: bool = False) -> list[dict]:

@@ -1,0 +1,121 @@
+"""Regenerate ``tests/fixtures/drift_bench_parallel.jsonl``.
+
+The golden calibration fixture pins ROADMAP item 3's exit criterion as
+a test: on these drift rows the *seed* spec's modeled-vs-measured
+Spearman is **negative** while the *fitted* spec's is near 1.  The
+ladder below is chosen to expose the seed model's failure mode, not to
+flatter it: the seed prices a plane mostly by its padded element count
+(DMA bytes / compute cycles at datasheet constants, with a token
+1 us/step overhead), but interpreter-mode Pallas on a CPU host pays a
+large *per-grid-step* dispatch cost — so pairs where the grid-step
+count and the element count move in opposite directions (a tall
+narrow plane at vf=1 vs. a short wide plane at max vf) invert the
+seed's ranking.  The calibration fit recovers exactly that overhead
+term from the recorded features, flipping the correlation.
+
+Run from the repo root (takes ~a minute, interpreter mode):
+
+    python benchmarks/make_calibration_fixture.py
+
+and commit the regenerated fixture.  The companion test is
+``tests/test_calibration.py::test_golden_fixture_*``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.core import build_schedule, compile_graph, sweep_vector_factor
+from repro.core.apps import build_app
+
+_APP = "gaussian_blur"
+_REPS = 5
+_OUT = os.path.join(os.path.dirname(__file__), "..", "tests", "fixtures",
+                    "drift_bench_parallel.jsonl")
+
+#: ((H, W), vector_factor) — grid-step count vs. padded elements are
+#: deliberately anti-correlated across the ladder (see module docstring):
+#: the vf=1 rows run many small grid steps (overhead-dominated, cheap
+#: under the seed model, slow in reality), the max-vf rows run a single
+#: big step (element-dominated, expensive under the seed model, fast in
+#: reality)
+LADDER = [
+    ((32, 2048), 1),       # grid 16, elements  65536
+    ((64, 2048), 1),       # grid 16, elements 131072
+    ((128, 1024), 1),      # grid  8, elements 131072
+    ((32, 4096), 1),       # grid 32, elements 131072
+    ((96, 2048), 1),       # grid 16, elements 196608
+    ((256, 640), 5),       # grid  1, elements 163840
+    ((256, 896), 7),       # grid  1, elements 229376
+    ((256, 1024), 8),      # grid  1, elements 262144
+]
+
+
+def measure_rows() -> list[dict]:
+    rng = np.random.default_rng(0)
+    rows = []
+    for (h, w), vf in LADDER:
+        sched = build_schedule(build_app(_APP, h, w))
+        rec = next(r for r in sweep_vector_factor(sched.groups[0])
+                   if r["vector_factor"] == vf)
+        assert rec["feasible"], ((h, w), vf)
+        app = compile_graph(build_app(_APP, h, w), backend="pallas",
+                            vector_factor=vf)
+        x = rng.normal(size=(h, w)).astype(np.float32)
+
+        def call() -> None:
+            np.asarray(app(img=x)["out"])
+
+        call()                                  # warmup (compiles)
+        best = float("inf")
+        for _ in range(_REPS):
+            t0 = time.perf_counter()
+            call()
+            best = min(best, time.perf_counter() - t0)
+        rows.append({"kind": "vf_sweep", "signature": sched.graph.signature(),
+                     "shapes": [[h, w]], "backend": "pallas",
+                     "modeled_s": rec["modeled_s"], "measured_s": best,
+                     "attrs": {"vector_factor": vf,
+                               "tile": list(rec["tile"]), "app": _APP,
+                               "features": {"groups": [rec["features"]]}}})
+        print(f"{h}x{w} vf{vf}: grid={rec['features']['grid']} "
+              f"modeled={rec['modeled_s'] * 1e6:.1f}us "
+              f"measured={best * 1e6:.1f}us")
+    return rows
+
+
+def main() -> None:
+    from repro.obs.drift import DriftRow, drift_report
+    from repro.tune.calibrate import calibrate
+
+    raw = measure_rows()
+    rows = [DriftRow.from_dict(d) for d in raw]
+    seed = drift_report(rows)
+    result = calibrate(rows)
+    assert result.fitted, result.warning
+    after = drift_report(rows, spec=result.spec)["with_spec"]
+    print(f"\nseed:   spearman={seed['spearman']:+.3f} "
+          f"bias={seed['bias']:.2f}")
+    print(f"fitted: spearman={after['spearman']:+.3f} "
+          f"bias={after['bias']:.2f}  ({result.describe()})")
+    if seed["spearman"] > 0:
+        print("WARNING: seed spearman is positive; the fixture will not "
+              "pin the inversion — re-tune the ladder for this machine")
+    if after["spearman"] <= 0.8:
+        print("WARNING: fitted spearman <= 0.8 — fit did not converge "
+              "on this ladder")
+    os.makedirs(os.path.dirname(_OUT), exist_ok=True)
+    with open(_OUT, "w") as f:
+        for d in raw:
+            f.write(json.dumps(d) + "\n")
+    print(f"wrote {len(raw)} rows -> {_OUT}")
+
+
+if __name__ == "__main__":
+    main()

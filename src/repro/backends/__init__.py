@@ -20,8 +20,8 @@ record; see ``docs/backends.md`` for the anatomy and the
 add-a-backend walkthrough.
 """
 from repro.backends.registry import (backends, get, names, register,
-                                     resolve, unregister,
-                                     use_pallas_kernels)
+                                     resolve, resolve_calibrated,
+                                     unregister, use_pallas_kernels)
 from repro.backends.spec import (Backend, STAGE_KINDS,
                                  UnsupportedBackendError,
                                  _default_platform as current_platform)
@@ -30,7 +30,8 @@ from repro.backends.seeds import (PALLAS, PALLAS_GPU, SEED_BACKENDS, XLA,
 
 __all__ = [
     "Backend", "UnsupportedBackendError", "STAGE_KINDS",
-    "register", "resolve", "get", "names", "backends", "unregister",
+    "register", "resolve", "resolve_calibrated", "get", "names",
+    "backends", "unregister",
     "current_platform", "use_pallas_kernels",
     "XLA", "XLA_STAGED", "PALLAS", "PALLAS_GPU", "SEED_BACKENDS",
 ]

@@ -13,8 +13,8 @@ import threading
 
 from repro.backends.spec import Backend, UnsupportedBackendError
 
-__all__ = ["register", "resolve", "get", "names", "backends",
-           "unregister", "use_pallas_kernels"]
+__all__ = ["register", "resolve", "resolve_calibrated", "get", "names",
+           "backends", "unregister", "use_pallas_kernels"]
 
 _lock = threading.Lock()
 _registry: dict[str, Backend] = {}
@@ -66,6 +66,34 @@ def resolve(backend) -> Backend:
     raise UnsupportedBackendError(
         f"backend must be a name or a Backend spec, got "
         f"{type(backend).__name__}", missing=("registered",))
+
+
+def resolve_calibrated(backend, calibrate="auto", **kwargs) -> Backend:
+    """Resolve ``backend``, swapping in its calibrated spec if one applies.
+
+    The registry stays the single resolution point: callers that honor
+    a ``calibrate=`` argument (``compile_graph``, ``tune_graph``,
+    ``replicate_app``) route it here instead of each re-implementing
+    the lookup.  ``calibrate=None``/``False`` (or no persisted/fittable
+    calibration for this backend + device kind) returns the registered
+    record *unchanged* — same object, same digest, so uncalibrated
+    compile/tuning cache keys are bit-stable across this feature.  A
+    hit returns a copy via :meth:`~repro.backends.spec.Backend.with_spec`
+    whose digest reflects the fitted constants, giving calibrated runs
+    their own cache namespace.  ``kwargs`` pass through to
+    :func:`repro.tune.calibrate.resolve_calibration` (``store=``,
+    ``device_kind=``, ``drift=``).
+    """
+    be = resolve(backend)
+    if calibrate is None or calibrate is False:
+        return be
+    # lazy import: backends must stay importable without the tune
+    # package (which imports core, which imports backends)
+    from repro.tune.calibrate import resolve_calibration
+    spec = resolve_calibration(be, calibrate, **kwargs)
+    if spec is None or spec is be.spec:
+        return be
+    return be.with_spec(spec)
 
 
 def get(name: str) -> Backend | None:

@@ -183,6 +183,20 @@ class Backend:
         """``name@digest`` — the string caches store for this backend."""
         return f"{self.name}@{self.digest()}"
 
+    def with_spec(self, spec: Any) -> "Backend":
+        """A copy of this record carrying ``spec`` as its constants.
+
+        The calibration path (:func:`repro.backends.resolve_calibrated`)
+        uses this to swap a fitted
+        :class:`~repro.tune.calibrate.CalibratedSpec` in: the copy's
+        :meth:`digest` — and therefore every compile/tuning cache key —
+        reflects the new constants, while the registered (uncalibrated)
+        record and its digest are untouched.
+        """
+        if spec is self.spec:
+            return self
+        return dataclasses.replace(self, spec=spec)
+
     # ------------------------------------------------------------------
     # capability gating
     # ------------------------------------------------------------------

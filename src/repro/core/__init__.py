@@ -20,7 +20,8 @@ from repro.core.fusion import BACKENDS, lower_graph, lower_group
 from repro.core.host import CompiledApp, LaunchHandle, build_host_app
 from repro.core.compiler import compile_graph
 from repro.core.simulate import TaskTiming, analytic_latency, simulate_pipeline
-from repro.core.vectorize import (TPUSpec, V5E, choose_tile, select_tile,
+from repro.core.vectorize import (TPUSpec, V5E, choose_tile, plane_features,
+                                  schedule_features, select_tile,
                                   sweep_vector_factor)
 
 __all__ = [
@@ -32,5 +33,5 @@ __all__ = [
     "LaunchHandle", "build_host_app", "compile_graph", "TaskTiming",
     "analytic_latency",
     "simulate_pipeline", "TPUSpec", "V5E", "choose_tile", "select_tile",
-    "sweep_vector_factor",
+    "sweep_vector_factor", "plane_features", "schedule_features",
 ]

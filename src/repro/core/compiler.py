@@ -57,6 +57,7 @@ def compile_graph(graph: DataflowGraph, backend="pallas", *,
                   vector_factor: int | None = None,
                   max_tile: tuple[int, int] | None = None,
                   tune: Any = None, tune_cache: Any = None,
+                  calibrate: Any = None,
                   interpret: bool | None = None, jit: bool = True,
                   trace: Any = None) -> CompiledApp:
     """Compile a dataflow graph end-to-end into a :class:`CompiledApp`.
@@ -97,6 +98,17 @@ def compile_graph(graph: DataflowGraph, backend="pallas", *,
     ``tune`` and ``vector_factor`` are mutually exclusive — one is a
     measurement, the other an override.
 
+    ``calibrate`` swaps the backend's datasheet constants for fitted
+    ones (:mod:`repro.tune.calibrate`): ``"auto"`` loads the
+    :class:`~repro.tune.calibrate.CalibratedSpec` persisted for this
+    backend + device kind (fitting one from the drift log when enough
+    rows have accumulated), a spec instance applies verbatim, and the
+    default ``None`` keeps the seed constants — bit-identical
+    schedules and cache keys to every release before this knob
+    existed.  A calibrated compile carries a different backend digest,
+    so its tuning/compile cache entries never mix with uncalibrated
+    ones.  An explicit ``spec=`` still wins over calibration.
+
     ``trace`` plugs the compile into the flight recorder
     (:mod:`repro.obs`): ``True`` records into a private
     :class:`~repro.obs.tracer.Tracer`, an explicit tracer records
@@ -128,8 +140,8 @@ def compile_graph(graph: DataflowGraph, backend="pallas", *,
             "tune= and max_tile= are mutually exclusive: the tile cap is "
             "one of the tuner's search axes (and part of the cached "
             "config); pass max_tile_candidates to tune_graph instead")
-    from repro.backends import resolve
-    be = resolve(backend)
+    from repro.backends import resolve_calibrated
+    be = resolve_calibrated(backend, calibrate)
     spec = spec or be.spec
     interpret = be.resolve_interpret(interpret)
     tracer = resolve_tracer(trace)

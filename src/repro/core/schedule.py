@@ -126,6 +126,20 @@ class Schedule:
     #: human-readable log from the pass pipeline + the fusion search
     diagnostics: list[str] = dataclasses.field(default_factory=list)
 
+    def features(self, items: int = 1) -> dict:
+        """Cost-model features of the selected tiles, drift-row ready.
+
+        Delegates to :func:`repro.core.vectorize.schedule_features`:
+        per modeled group, the (grid, bytes/step, per-kind compute
+        steps) triple that makes the analytic model linear in the
+        hardware constants' reciprocals.  Every drift row the engine,
+        the tuner and the benchmarks persist carries this dict so the
+        calibration fit (:mod:`repro.tune.calibrate`) can re-estimate
+        the constants offline.
+        """
+        from repro.core.vectorize import schedule_features
+        return schedule_features(self, items=items)
+
     def describe(self) -> str:
         """Render the schedule: kernels, FIFOs, tiles + provenance.
 

@@ -33,6 +33,7 @@ from repro.core.schedule import FusionGroup
 
 __all__ = ["TPUSpec", "choose_tile", "select_tile", "sweep_vector_factor",
            "modeled_plane_time", "modeled_schedule_time", "scale_spec",
+           "plane_features", "schedule_features",
            "vmem_report", "DEFAULT_MAX_TILE"]
 
 LANE = 128     # VPU/MXU lane width (registry default; see _constants)
@@ -148,6 +149,11 @@ def modeled_plane_time(group: FusionGroup, tile: tuple[int, int],
     issue overhead.  Padded rows/columns are priced: the grid covers
     the tile-rounded plane, so an over-wide tile on a narrow plane
     streams dead columns.
+
+    A calibrated spec (:class:`repro.tune.calibrate.CalibratedSpec`)
+    may carry an ``ii_scale`` mapping stage kinds to fitted multipliers
+    of their issue intervals; any spec without one prices every stage
+    at its declared ``ii`` exactly as before.
     """
     th, tw = tile
     H, W = group.stages[0].outputs[0].shape
@@ -159,8 +165,64 @@ def modeled_plane_time(group: FusionGroup, tile: tuple[int, int],
     for ch in group.outputs:
         bytes_step += th * tw * np.dtype(ch.dtype).itemsize
     dma_s = bytes_step / spec.hbm_bw
-    compute_s = sum(st.ii for st in group.stages) * th * tw / spec.clock_hz
+    scale = dict(getattr(spec, "ii_scale", ()) or ())
+    if scale:
+        steps = sum(st.ii * scale.get(st.kind, 1.0) for st in group.stages)
+    else:
+        steps = sum(st.ii for st in group.stages)
+    compute_s = steps * th * tw / spec.clock_hz
     return grid * (spec.step_overhead_s + max(dma_s, compute_s))
+
+
+def plane_features(group: FusionGroup, tile: tuple[int, int]) -> dict:
+    """Spec-independent features behind :func:`modeled_plane_time`.
+
+    The model is, per fusion group,
+
+    ``t = grid * (step_overhead_s + max(bytes_step / hbm_bw,
+    sum_kind(steps[kind] * ii_scale[kind]) / clock_hz))``
+
+    so recording ``grid`` (DMA issue count), ``bytes_step`` (HBM bytes
+    per step) and ``steps`` (per-stage-kind issue-interval cycles per
+    step, already multiplied by the tile area) into every drift row
+    makes the modeled time *linear in the constants' reciprocals* —
+    exactly what the calibration fit
+    (:func:`repro.tune.calibrate.calibrate`) regresses from measured
+    times.  :func:`repro.obs.drift.predict_features` is the inverse:
+    it reconstitutes the modeled seconds from these features under any
+    spec, bit-identically to :func:`modeled_plane_time`.
+    """
+    th, tw = tile
+    H, W = group.stages[0].outputs[0].shape
+    grid = (_round_up(H, th) // th) * (_round_up(W, tw) // tw)
+    bytes_step = 0
+    for ch in group.inputs:
+        hy, hx = group.halo.get(ch, (0, 0))
+        bytes_step += (th + 2 * hy) * (tw + 2 * hx) * np.dtype(ch.dtype).itemsize
+    for ch in group.outputs:
+        bytes_step += th * tw * np.dtype(ch.dtype).itemsize
+    steps: dict[str, float] = {}
+    for st in group.stages:
+        steps[st.kind] = steps.get(st.kind, 0.0) + float(st.ii)
+    return {"grid": grid, "bytes_step": bytes_step,
+            "steps": {k: v * th * tw for k, v in sorted(steps.items())}}
+
+
+def schedule_features(schedule, items: int = 1) -> dict:
+    """Whole-app drift-row features: one entry per modeled group.
+
+    Trivial (custom/reduce) groups carry no tile and score zero in
+    :func:`modeled_schedule_time`, so they contribute no features
+    either.  ``items`` scales the prediction (a width-``n`` batched
+    launch does the plane ``n`` times); it rides in the feature dict so
+    a drift row stays self-describing.
+    """
+    groups = [plane_features(g, g.tile) for g in schedule.groups
+              if not g.is_trivial and g.tile is not None]
+    feats = {"groups": groups}
+    if items != 1:
+        feats["items"] = int(items)
+    return feats
 
 
 def sweep_vector_factor(group: FusionGroup, spec: TPUSpec | None = None,
@@ -172,7 +234,9 @@ def sweep_vector_factor(group: FusionGroup, spec: TPUSpec | None = None,
     Default candidates run 1..cap (every factor the plane/max_tile can
     hold, plus one infeasible sentinel so callers can check that
     feasibility is monotone).  Each record carries ``vector_factor``,
-    ``feasible``, the chosen ``tile`` and ``modeled_s``.  ``trace``
+    ``feasible``, the chosen ``tile``, ``modeled_s`` and the
+    :func:`plane_features` behind the modeled time (``features`` — what
+    benchmark drift rows persist for the calibration fit).  ``trace``
     (a :class:`~repro.obs.tracer.Tracer`) wraps the sweep in a
     ``compile.vectorize.sweep`` span recording how many candidates
     were scored and how many were feasible.
@@ -206,7 +270,8 @@ def sweep_vector_factor(group: FusionGroup, spec: TPUSpec | None = None,
             records.append({"vector_factor": vf, "feasible": True,
                             "tile": tile,
                             "modeled_s": modeled_plane_time(group, tile,
-                                                            spec)})
+                                                            spec),
+                            "features": plane_features(group, tile)})
     finally:
         # the sweep only *scores*; choose_tile/select_tile commit.
         # Without the restore, a standalone sweep would pin the group

@@ -13,7 +13,7 @@ load — every repro layer can depend on it without cycles.
 """
 from repro.obs.drift import (DRIFT_ENV, DriftLog, DriftRow,
                              default_drift_path, drift_report,
-                             resolve_drift, spearman)
+                             predict_features, resolve_drift, spearman)
 from repro.obs.export import (export_chrome_trace, load_chrome_trace,
                               to_chrome_events, validate_chrome_trace)
 from repro.obs.metrics import Counter, Gauge, Histogram, MetricsRegistry
@@ -28,5 +28,5 @@ __all__ = [
     "to_chrome_events", "export_chrome_trace", "load_chrome_trace",
     "validate_chrome_trace",
     "DriftLog", "DriftRow", "default_drift_path", "drift_report",
-    "resolve_drift", "spearman", "DRIFT_ENV",
+    "predict_features", "resolve_drift", "spearman", "DRIFT_ENV",
 ]

@@ -22,6 +22,15 @@ model at least order configurations correctly?) and **bias** (the
 median measured/modeled ratio — the constant the model is off by).
 Spearman is computed manually (tie-averaged ranks + Pearson on the
 ranks) because scipy is not a dependency of this repo.
+
+Rows may additionally carry **features** (``attrs["features"]``, see
+:func:`repro.core.vectorize.schedule_features`): the spec-independent
+terms (grid, bytes/step, per-stage-kind compute steps) behind the
+modeled seconds.  :func:`predict_features` reconstitutes the modeled
+time from those features under *any* spec — which is what lets the
+calibration fit (:mod:`repro.tune.calibrate`) re-score history under
+candidate constants, and lets ``drift_report(rows, spec=fitted)``
+show a before/after-fit comparison without re-running anything.
 """
 from __future__ import annotations
 
@@ -33,7 +42,7 @@ from typing import Any, Iterable
 import numpy as np
 
 __all__ = ["DriftLog", "DriftRow", "default_drift_path", "resolve_drift",
-           "spearman", "drift_report", "DRIFT_ENV"]
+           "spearman", "drift_report", "predict_features", "DRIFT_ENV"]
 
 #: environment variable overriding the on-disk drift log location
 DRIFT_ENV = "REPRO_DRIFT_LOG"
@@ -92,6 +101,13 @@ class DriftRow:
                    d.get("shapes"), d.get("backend", ""),
                    d.get("modeled_s", 0.0), d.get("measured_s", 0.0),
                    d.get("attrs"))
+
+    @property
+    def features(self) -> dict[str, Any] | None:
+        """Cost-model features behind ``modeled_s`` (or None for rows
+        written before PR 9 / by writers that don't model)."""
+        f = self.attrs.get("features")
+        return f if isinstance(f, dict) else None
 
 
 class DriftLog:
@@ -224,40 +240,123 @@ def spearman(xs: Iterable[float], ys: Iterable[float]) -> float:
     return float(((rx - rx.mean()) * (ry - ry.mean())).mean() / (sx * sy))
 
 
+def predict_features(features: dict[str, Any], spec: Any) -> float:
+    """Modeled seconds reconstituted from drift-row features.
+
+    ``features`` is the dict produced by
+    :func:`repro.core.vectorize.schedule_features` (or
+    :func:`~repro.core.vectorize.plane_features` wrapped in a
+    single-group list): per fusion group the DMA-issue ``grid``, HBM
+    ``bytes_step``, and per-stage-kind compute ``steps`` (issue
+    intervals x tile area).  The prediction is, per group,
+
+    ``grid * (step_overhead_s + max(bytes_step / hbm_bw,
+    sum_kind(steps[kind] * ii_scale[kind]) / clock_hz))``
+
+    summed over groups and multiplied by ``items`` — **bit-identical**
+    to :func:`repro.core.vectorize.modeled_schedule_time` for an
+    unscaled spec, so re-scoring history under a candidate spec is
+    exactly what the compiler would have modeled.  ``spec`` is duck
+    typed (only ``clock_hz``/``hbm_bw``/``step_overhead_s`` and an
+    optional ``ii_scale`` are read), keeping :mod:`repro.obs` free of
+    the core import chain.
+
+    >>> class S:
+    ...     clock_hz, hbm_bw, step_overhead_s = 1e9, 1e9, 1e-6
+    >>> feats = {"groups": [{"grid": 4, "bytes_step": 1000,
+    ...                      "steps": {"point": 2000.0}}]}
+    >>> round(predict_features(feats, S()) * 1e6, 3)  # 4*(1us + 2us)
+    12.0
+    """
+    scale = dict(getattr(spec, "ii_scale", ()) or ())
+    total = 0.0
+    for g in features.get("groups", ()):
+        dma_s = g["bytes_step"] / spec.hbm_bw
+        steps = 0.0
+        for kind, cycles in g.get("steps", {}).items():
+            steps += cycles * scale.get(kind, 1.0)
+        compute_s = steps / spec.clock_hz
+        total += g["grid"] * (spec.step_overhead_s + max(dma_s, compute_s))
+    return total * features.get("items", 1)
+
+
+def _usable(modeled: float, measured: float) -> bool:
+    """A (modeled, measured) pair the stats can digest: finite and
+    positive on both sides.  NaN/inf measurements (a hung launch, a
+    clock that wrapped) and unmodeled rows are skipped — and counted,
+    so a report can't silently hide a sick log."""
+    return (np.isfinite(modeled) and np.isfinite(measured)
+            and modeled > 0 and measured > 0)
+
+
+def _summary(modeled: np.ndarray, measured: np.ndarray) -> dict[str, Any]:
+    ratio = measured / modeled
+    q75, q25 = np.percentile(np.log10(ratio), [75, 25])
+    return {
+        "n": int(len(modeled)),
+        "spearman": spearman(modeled, measured),
+        "bias": float(np.median(ratio)),
+        "log10_bias": float(np.median(np.log10(ratio))),
+        "log10_spread": float(q75 - q25),
+    }
+
+
 def drift_report(rows: Iterable[DriftRow] | DriftLog | None = None,
-                 *, min_group: int = 2) -> dict[str, Any]:
+                 *, min_group: int = 2, spec: Any = None) -> dict[str, Any]:
     """Summarize accumulated drift rows into the calibration inputs.
 
     Returns::
 
-        {"n": ..., "spearman": ...,        # overall rank correlation
+        {"n": ..., "skipped": ...,         # usable rows / dropped rows
+         "spearman": ...,                  # overall rank correlation
          "bias": ...,                      # median measured/modeled
-         "log10_spread": ...,              # IQR of log10(ratio)
+         "log10_bias": ..., "log10_spread": ...,
          "groups": {sig: {"n", "spearman", "bias"}, ...},
-         "by_kind": {kind: n, ...}}
+         "by_kind": {kind: n, ...},
+         "with_spec": {...}}               # only when ``spec=`` given
 
     ``spearman`` near 1 means the model orders workloads correctly
     even if its absolute scale is off (then ``bias`` is the single
     constant to fold in); near 0 or negative reproduces the
     misordering that makes tuning-by-model unreliable (ROADMAP item
-    3).  Groups smaller than ``min_group`` are skipped for per-group
+    3).  Rows whose modeled or measured seconds are NaN, infinite or
+    nonpositive (a hung launch, an unmodeled path) are skipped and
+    counted in ``skipped`` rather than poisoning every statistic.
+    Groups smaller than ``min_group`` are skipped for per-group
     correlation but still count toward the overall stats.
+
+    ``spec=`` turns on the before/after-fit comparison: every usable
+    row carrying features is re-scored with :func:`predict_features`
+    under the given (typically calibrated) spec, and the same summary
+    statistics over those re-predictions land under ``with_spec`` —
+    plus ``without_features``, the count of rows that predate feature
+    capture and so cannot be re-scored.  Comparing the top-level
+    ``spearman``/``bias`` (as logged, under the spec that produced the
+    rows) against ``with_spec`` is the calibration exit criterion.
     """
     if rows is None:
         rows = DriftLog()
     if isinstance(rows, DriftLog):
         rows = rows.rows()
-    rows = [r for r in rows if r.modeled_s > 0 and r.measured_s > 0]
-    if not rows:
-        return {"n": 0, "spearman": float("nan"), "bias": float("nan"),
-                "log10_spread": float("nan"), "groups": {},
-                "by_kind": {}}
-    modeled = np.asarray([r.modeled_s for r in rows])
-    measured = np.asarray([r.measured_s for r in rows])
-    ratio = measured / modeled
+    rows = list(rows)
+    usable = [r for r in rows if _usable(r.modeled_s, r.measured_s)]
+    skipped = len(rows) - len(usable)
+    if not usable:
+        out: dict[str, Any] = {
+            "n": 0, "skipped": skipped, "spearman": float("nan"),
+            "bias": float("nan"), "log10_bias": float("nan"),
+            "log10_spread": float("nan"), "groups": {}, "by_kind": {}}
+        if spec is not None:
+            out["with_spec"] = {
+                "n": 0, "without_features": 0, "spearman": float("nan"),
+                "bias": float("nan"), "log10_bias": float("nan"),
+                "log10_spread": float("nan")}
+        return out
+    modeled = np.asarray([r.modeled_s for r in usable])
+    measured = np.asarray([r.measured_s for r in usable])
     by_kind: dict[str, int] = {}
     groups: dict[str, list[DriftRow]] = {}
-    for r in rows:
+    for r in usable:
         by_kind[r.kind] = by_kind.get(r.kind, 0) + 1
         groups.setdefault(r.signature, []).append(r)
     group_stats: dict[str, dict[str, Any]] = {}
@@ -272,12 +371,29 @@ def drift_report(rows: Iterable[DriftRow] | DriftLog | None = None,
             "bias": float(np.median(np.asarray(g_meas)
                                     / np.asarray(g_mod))),
         }
-    q75, q25 = np.percentile(np.log10(ratio), [75, 25])
-    return {
-        "n": len(rows),
-        "spearman": spearman(modeled, measured),
-        "bias": float(np.median(ratio)),
-        "log10_spread": float(q75 - q25),
-        "groups": group_stats,
-        "by_kind": by_kind,
-    }
+    out = _summary(modeled, measured)
+    out["skipped"] = skipped
+    out["groups"] = group_stats
+    out["by_kind"] = by_kind
+    if spec is not None:
+        re_mod: list[float] = []
+        re_meas: list[float] = []
+        no_feats = 0
+        for r in usable:
+            feats = r.features
+            pred = (predict_features(feats, spec)
+                    if feats is not None else float("nan"))
+            if _usable(pred, r.measured_s):
+                re_mod.append(pred)
+                re_meas.append(r.measured_s)
+            else:
+                no_feats += 1
+        if re_mod:
+            with_spec = _summary(np.asarray(re_mod), np.asarray(re_meas))
+        else:
+            with_spec = {"n": 0, "spearman": float("nan"),
+                         "bias": float("nan"), "log10_bias": float("nan"),
+                         "log10_spread": float("nan")}
+        with_spec["without_features"] = no_feats
+        out["with_spec"] = with_spec
+    return out

@@ -31,7 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.backends import resolve
+from repro.backends import resolve, resolve_calibrated
 from repro.core.fusion import lower_graph
 from repro.core.graph import Channel, DataflowGraph, GraphError
 from repro.core.host import CompiledApp, LaunchHandle
@@ -53,9 +53,9 @@ __all__ = ["ReplicatedApp", "replicate_app", "graph_input_halo",
 UNROUTED_COMPILE_KWARGS = frozenset(
     {"mesh", "data_axis", "donate", "jit", "trace"})
 
-#: kwargs consumed by the tuning resolution step itself (not by the
-#: scheduler/lowering signatures)
-_TUNE_KWARGS = frozenset({"tune", "tune_cache"})
+#: kwargs consumed by the tuning/calibration resolution steps
+#: themselves (not by the scheduler/lowering signatures)
+_TUNE_KWARGS = frozenset({"tune", "tune_cache", "calibrate"})
 
 
 def replication_kwarg_routing() -> tuple[frozenset, frozenset, frozenset]:
@@ -193,6 +193,10 @@ def replicate_app(source: DataflowGraph | CompiledApp,
         graph = source
         backend = resolve(backend or "pallas")
     backend.require("replication")
+    # calibration resolves once, up front: the tuner's prior, the
+    # scheduler's budgets and every replica's lowering must all see
+    # the same (possibly fitted) constants
+    backend = resolve_calibrated(backend, compile_kwargs.get("calibrate"))
 
     shapes = {ch.shape for ch in graph.channels}
     if len(shapes) != 1 or len(next(iter(shapes))) != 2:

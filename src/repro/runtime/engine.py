@@ -62,7 +62,7 @@ import numpy as np
 
 from repro.core.graph import DataflowGraph
 from repro.core.host import CompiledApp
-from repro.core.vectorize import modeled_schedule_time
+from repro.core.vectorize import modeled_schedule_time, schedule_features
 from repro.obs.drift import resolve_drift
 from repro.obs.tracer import resolve_tracer
 from repro.runtime.batching import MicroBatcher
@@ -286,6 +286,7 @@ class StreamEngine:
         self.tracer = resolve_tracer(trace)
         self.drift = resolve_drift(drift)
         self._modeled_s: dict[str, float] = {}   # sig -> modeled s/item
+        self._features: dict[str, dict] = {}     # sig -> drift features
         self._launched: set[tuple[str, int]] = set()  # warm (sig, width)
         self._compile_kwargs = compile_kwargs
         self._bucket_pad = bucket_pad
@@ -748,15 +749,24 @@ class StreamEngine:
             if modeled is None:
                 modeled = self._modeled_s[sig] = modeled_schedule_time(
                     app.schedule)
+                self._features[sig] = schedule_features(app.schedule)
             kind = "launch"
             if (sig, width) not in self._launched:
                 self._launched.add((sig, width))
                 kind = "compile"       # cold (sig, width): svc includes jit
+            # the features behind `modeled * width`, so the calibration
+            # fit (repro.tune.calibrate) can re-score this launch under
+            # candidate constants; `compile` rows keep them too but the
+            # fit excludes that kind by default (jit time pollutes svc)
+            features = dict(self._features[sig])
+            if width != 1:
+                features["items"] = int(width)
             self.drift.record(
                 kind, sig,
                 [list(shape) for _n, shape in self._io_specs.get(sig, [])],
                 self.backend.name, modeled * width, svc,
-                app=app.graph.name, width=width, batch=len(batch))
+                app=app.graph.name, width=width, batch=len(batch),
+                features=features)
 
     def _wait_for_work(self) -> None:
         """Park until new work arrives or the formation deadline lands."""

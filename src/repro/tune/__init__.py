@@ -7,14 +7,21 @@ for profiling once per ``(graph, backend, device kind, shapes)`` and
 then always compiles straight to the measured operating point — the
 software analogue of FLOWER shipping a synthesized bitstream.
 
-  store.py  — :class:`ScheduleConfig` (a reapplyable point of the
-              search space) and :class:`TuningCache` (atomic on-disk
-              JSON records keyed by :class:`TuningKey`)
-  search.py — :func:`tune_graph` (model-pruned measured search) and
-              :func:`resolve_tuning` (the ``tune=`` argument protocol)
+  store.py     — :class:`ScheduleConfig` (a reapplyable point of the
+                 search space) and :class:`TuningCache` (atomic on-disk
+                 JSON records keyed by :class:`TuningKey`)
+  search.py    — :func:`tune_graph` (model-pruned measured search) and
+                 :func:`resolve_tuning` (the ``tune=`` argument protocol)
+  calibrate.py — :func:`calibrate` (fit the cost model's constants from
+                 drift logs), :class:`CalibratedSpec` and its
+                 :class:`CalibrationStore` persistence
 
 See ``docs/tuning.md`` for every knob and a worked trace.
 """
+from repro.tune.calibrate import (CalibratedSpec, CalibrationResult,
+                                  CalibrationStore, calibrate,
+                                  calibrate_backend, load_calibration,
+                                  resolve_calibration)
 from repro.tune.search import (Trial, TuningResult, default_measure,
                                resolve_tuning, tune_graph)
 from repro.tune.store import (ScheduleConfig, TuningCache, TuningKey,
@@ -24,4 +31,7 @@ __all__ = [
     "ScheduleConfig", "TuningCache", "TuningKey", "TuningRecord",
     "default_cache_root", "Trial", "TuningResult", "default_measure",
     "resolve_tuning", "tune_graph",
+    "CalibratedSpec", "CalibrationResult", "CalibrationStore",
+    "calibrate", "calibrate_backend", "load_calibration",
+    "resolve_calibration",
 ]

@@ -1,0 +1,565 @@
+"""Cost-model calibration: fit the spec's constants from drift logs.
+
+The analytic model (:func:`repro.core.vectorize.modeled_plane_time`)
+prices a fusion group as
+
+``t = grid * (step_overhead_s + max(bytes_step / hbm_bw,
+sum_kind(steps[kind] * ii_scale[kind]) / clock_hz))``
+
+with constants declared by :class:`~repro.core.vectorize.TPUSpec`.
+Those constants are datasheet numbers — on the machine actually
+serving requests (often a CPU host running Pallas in interpreter
+mode) they are ~15x off and *misordered* (ROADMAP item 3, observed
+in ``BENCH_parallel.json``).  This module closes the loop the way the
+de Fine Licht HLS-transformations work calibrates its resource model
+from synthesis reports: every drift row (PR 7) now carries the
+spec-independent **features** behind its modeled time (grid,
+bytes/step, per-stage-kind compute steps — see
+:func:`repro.core.vectorize.schedule_features`), which makes the
+model **linear in the constants' reciprocals** once each group's
+``max(dma, compute)`` branch is decided.  :func:`calibrate` solves
+that with an alternating active-set, relative-error-weighted least
+squares:
+
+1. canonicalize rows (drop unusable, dedupe exact duplicates, sort) —
+   the fit is invariant to row order and duplication;
+2. under the current constants, mark each group DMA- or
+   compute-bound; the model is now linear in
+   ``theta = [step_overhead_s, 1/hbm_bw, alpha_kind...]`` where
+   ``alpha_kind = ii_scale[kind] / clock_hz``;
+3. solve the weighted normal problem (rows scaled by ``1/measured``
+   so every row contributes *relative* error — a 4 ms blur and a
+   40 us copy weigh the same), drop all-zero columns (their constants
+   keep seed values), clamp nonphysical negatives;
+4. repeat until the branch assignment stops changing.
+
+Too few rows or a rank-deficient design **falls back to the seed
+spec with a warning — never NaN constants**; engine ``compile`` rows
+(whose measured time includes jit compilation, PR 7) are excluded by
+default so they cannot bias the fit.
+
+The result is a :class:`CalibratedSpec` — a frozen
+:class:`~repro.core.vectorize.TPUSpec` subclass carrying the fitted
+constants plus a per-stage-kind ``ii_scale`` — persisted beside the
+:class:`~repro.tune.store.TuningCache` (atomic JSON, keyed by backend
+``cache_key()`` + device kind, versioned) by :class:`CalibrationStore`
+and resolved into compiles by
+:func:`repro.backends.resolve_calibrated` /
+``compile_graph(calibrate="auto")``.  Because
+:meth:`~repro.backends.Backend.digest` covers every spec field,
+calibrated runs get their own compile/tuning cache namespace
+automatically while uncalibrated digests are untouched.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import tempfile
+import threading
+import time
+import warnings
+from typing import Any, Iterable
+
+import numpy as np
+
+from repro.core.vectorize import TPUSpec, V5E
+from repro.obs.drift import DriftLog, DriftRow
+from repro.tune.store import default_cache_root, detect_device_kind
+
+__all__ = ["CalibratedSpec", "CalibrationResult", "CalibrationStore",
+           "calibrate", "calibrate_backend", "load_calibration",
+           "resolve_calibration", "spec_to_json", "spec_from_json",
+           "CALIBRATION_VERSION", "MIN_ROWS"]
+
+#: bump when the fit/record format changes; readers skip other versions
+CALIBRATION_VERSION = 1
+
+#: below this many usable rows the fit refuses and keeps the seed spec
+MIN_ROWS = 8
+
+#: maximum alternating (branch-assign / solve) iterations
+_MAX_ITER = 25
+
+
+@dataclasses.dataclass(frozen=True)
+class CalibratedSpec(TPUSpec):
+    """A :class:`~repro.core.vectorize.TPUSpec` with fitted constants.
+
+    Being a subclass is the whole trick: every consumer that threads a
+    spec (vectorizer sweep, partitioner budget, tuner prior, backend
+    digest) picks up the calibrated constants with no new plumbing.
+    ``ii_scale`` is a tuple of ``(stage_kind, multiplier)`` pairs
+    (tuple, not dict, to stay hashable for the frozen dataclass);
+    :func:`repro.core.vectorize.modeled_plane_time` multiplies each
+    stage's declared issue interval by its kind's multiplier, so the
+    fit can express "stencil steps cost 3x what the seed ii claims"
+    without touching graph declarations.
+
+    >>> s = CalibratedSpec(ii_scale=(("stencil", 2.0),), n_rows=12)
+    >>> dict(s.ii_scale)["stencil"]
+    2.0
+    >>> isinstance(s, TPUSpec)
+    True
+    """
+
+    #: per-stage-kind issue-interval multipliers, sorted by kind
+    ii_scale: tuple = ()
+    #: drift rows the fit consumed (provenance, not behaviour)
+    n_rows: int = 0
+    #: fit/record format version
+    calibration_version: int = CALIBRATION_VERSION
+
+    def scale_for(self, kind: str) -> float:
+        return dict(self.ii_scale).get(kind, 1.0)
+
+
+def spec_to_json(spec: TPUSpec) -> dict[str, Any]:
+    """JSON-ready dict of every dataclass field (ii_scale as lists)."""
+    out: dict[str, Any] = {}
+    for f in dataclasses.fields(spec):
+        v = getattr(spec, f.name)
+        if f.name == "ii_scale":
+            v = [[k, s] for k, s in v]
+        out[f.name] = v
+    return out
+
+
+def spec_from_json(d: dict[str, Any]) -> CalibratedSpec:
+    """Inverse of :func:`spec_to_json` (unknown keys are ignored).
+
+    >>> s = CalibratedSpec(clock_hz=2e9, ii_scale=(("point", 1.5),))
+    >>> spec_from_json(spec_to_json(s)) == s
+    True
+    """
+    fields = {f.name for f in dataclasses.fields(CalibratedSpec)}
+    kw = {k: v for k, v in d.items() if k in fields}
+    if "ii_scale" in kw:
+        kw["ii_scale"] = tuple((str(k), float(s)) for k, s in kw["ii_scale"])
+    return CalibratedSpec(**kw)
+
+
+@dataclasses.dataclass
+class CalibrationResult:
+    """Outcome of one fit: the spec to use plus an audit trail.
+
+    ``fitted`` False means the fallback path ran (``spec`` is the seed
+    spec, ``warning`` says why); either way ``spec`` is usable and
+    finite — callers never need to re-check for NaN.
+    """
+
+    spec: TPUSpec
+    fitted: bool
+    n_rows: int = 0               #: usable rows the fit consumed
+    n_excluded: int = 0           #: rows dropped by kind (jit-polluted)
+    n_unusable: int = 0           #: rows without features / nonfinite
+    n_duplicates: int = 0         #: exact duplicates collapsed
+    iterations: int = 0
+    warning: str | None = None
+    #: fitted reciprocal-space parameters, for introspection/tests
+    params: dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def describe(self) -> str:
+        if not self.fitted:
+            return f"calibration fallback ({self.warning})"
+        s = self.spec
+        scales = ",".join(f"{k}={v:.3g}" for k, v in
+                          getattr(s, "ii_scale", ()))
+        return (f"calibrated from {self.n_rows} rows: "
+                f"clock={s.clock_hz:.3g}Hz hbm_bw={s.hbm_bw:.3g}B/s "
+                f"overhead={s.step_overhead_s:.3g}s ii_scale[{scales}]")
+
+
+# ----------------------------------------------------------------------
+# row canonicalization
+# ----------------------------------------------------------------------
+
+def _canon_rows(rows: Iterable[DriftRow],
+                exclude_kinds: tuple[str, ...]) -> tuple[list, int, int, int]:
+    """Filter, dedupe and sort rows into fit inputs.
+
+    Returns ``(fit_rows, n_excluded, n_unusable, n_duplicates)`` where
+    each fit row is ``(measured_s, items, groups)`` with ``groups`` a
+    list of ``(grid, bytes_step, {kind: steps})``.  Exact duplicates
+    collapse to one and the survivors are sorted by their canonical
+    JSON encoding, so the design matrix — and therefore the solution,
+    bit for bit — is independent of input order and duplication.
+    """
+    n_excluded = n_unusable = 0
+    keyed: dict[str, tuple] = {}
+    n_seen = 0
+    for r in rows:
+        if r.kind in exclude_kinds:
+            n_excluded += 1
+            continue
+        feats = r.features
+        if (feats is None or not feats.get("groups")
+                or not np.isfinite(r.measured_s) or r.measured_s <= 0):
+            n_unusable += 1
+            continue
+        try:
+            groups = [(int(g["grid"]), float(g["bytes_step"]),
+                       {str(k): float(v)
+                        for k, v in sorted(g.get("steps", {}).items())})
+                      for g in feats["groups"]]
+        except (KeyError, TypeError, ValueError):
+            n_unusable += 1
+            continue
+        if any(g[0] <= 0 for g in groups):
+            n_unusable += 1
+            continue
+        items = int(feats.get("items", 1))
+        row = (float(r.measured_s), items, groups)
+        key = json.dumps(row, sort_keys=True)
+        n_seen += 1
+        keyed[key] = row
+    n_duplicates = n_seen - len(keyed)
+    fit_rows = [keyed[k] for k in sorted(keyed)]
+    return fit_rows, n_excluded, n_unusable, n_duplicates
+
+
+# ----------------------------------------------------------------------
+# the fit
+# ----------------------------------------------------------------------
+
+def _assign_branches(fit_rows: list, theta_o: float, theta_b: float,
+                     alpha: dict[str, float]) -> list[list[bool]]:
+    """Per-row, per-group: True when DMA-bound under current theta."""
+    out = []
+    for _, _, groups in fit_rows:
+        out.append([bytes_step * theta_b
+                    >= sum(steps[k] * alpha.get(k, 0.0) for k in steps)
+                    for _, bytes_step, steps in groups])
+    return out
+
+
+def calibrate(rows: Iterable[DriftRow] | DriftLog,
+              spec: TPUSpec | None = None, *,
+              min_rows: int = MIN_ROWS,
+              exclude_kinds: tuple[str, ...] = ("compile",),
+              huber_delta: float | None = None,
+              max_iter: int = _MAX_ITER) -> CalibrationResult:
+    """Fit a :class:`CalibratedSpec` from drift rows.
+
+    ``rows`` is a :class:`~repro.obs.drift.DriftLog` or an iterable of
+    :class:`~repro.obs.drift.DriftRow`; only rows carrying features
+    and a finite positive ``measured_s`` participate.  ``spec`` seeds
+    the iteration and supplies every constant the data cannot identify
+    (default :data:`~repro.core.vectorize.V5E`).
+
+    ``exclude_kinds`` drops rows whose measured time is not a clean
+    launch measurement — by default the engine's ``compile`` rows,
+    whose ``measured_s`` includes jit compilation (PR 7) and would
+    drag every constant toward "first launches are slow".  Pass ``()``
+    to fit on everything.
+
+    ``huber_delta`` (in units of relative residual, e.g. ``3.0``)
+    switches the final solve to Huber IRLS so a few wild outliers
+    (preempted measurements) cannot dominate; ``None`` keeps plain
+    least squares, which is exactly recoverable in tests.
+
+    Never raises on bad data and never returns NaN constants: with
+    fewer than ``min_rows`` usable rows, or a design matrix that
+    cannot identify the remaining constants (rank-deficient), the
+    seed ``spec`` comes back with ``fitted=False`` and a warning.
+    """
+    seed = spec if spec is not None else V5E
+    if isinstance(rows, DriftLog):
+        rows = rows.rows()
+    fit_rows, n_excl, n_bad, n_dup = _canon_rows(tuple(rows),
+                                                 tuple(exclude_kinds))
+
+    def fallback(why: str) -> CalibrationResult:
+        warnings.warn(f"calibration fell back to the seed spec: {why}",
+                      RuntimeWarning, stacklevel=2)
+        return CalibrationResult(spec=seed, fitted=False,
+                                 n_rows=len(fit_rows), n_excluded=n_excl,
+                                 n_unusable=n_bad, n_duplicates=n_dup,
+                                 warning=why)
+
+    if len(fit_rows) < min_rows:
+        return fallback(f"{len(fit_rows)} usable rows < min_rows="
+                        f"{min_rows} ({n_bad} without features/nonfinite, "
+                        f"{n_excl} excluded by kind)")
+
+    kinds = sorted({k for _, _, groups in fit_rows
+                    for _, _, steps in groups for k in steps})
+    if not kinds:
+        return fallback("no compute steps in any row")
+
+    # seed theta: overhead, 1/bw, and alpha_k = ii_scale_k / clock
+    seed_scale = dict(getattr(seed, "ii_scale", ()) or ())
+    theta_o = float(seed.step_overhead_s)
+    theta_b = 1.0 / float(seed.hbm_bw)
+    alpha = {k: seed_scale.get(k, 1.0) / float(seed.clock_hz)
+             for k in kinds}
+
+    branches = _assign_branches(fit_rows, theta_o, theta_b, alpha)
+    iterations = 0
+    for iterations in range(1, max_iter + 1):
+        cols = ["overhead", "bw"] + kinds
+        A = np.zeros((len(fit_rows), len(cols)))
+        y = np.ones(len(fit_rows))
+        for i, (measured, items, groups) in enumerate(fit_rows):
+            w = items / measured          # relative-error weighting
+            for (grid, bytes_step, steps), dma in zip(groups, branches[i]):
+                A[i, 0] += w * grid
+                if dma:
+                    A[i, 1] += w * grid * bytes_step
+                else:
+                    for k, s in steps.items():
+                        A[i, 2 + kinds.index(k)] += w * grid * s
+        live = [j for j in range(len(cols)) if np.any(A[:, j] != 0.0)]
+        if not live:
+            return fallback("design matrix is all zeros")
+        sol, _, rank, _ = np.linalg.lstsq(A[:, live], y, rcond=None)
+        if rank < len(live):
+            return fallback(
+                f"rank-deficient design (rank {rank} < {len(live)} "
+                f"identifiable constants); need more workload variety")
+        if not np.all(np.isfinite(sol)):
+            return fallback("solver returned non-finite constants")
+        if huber_delta is not None:
+            # IRLS: down-weight rows whose relative residual exceeds
+            # delta, re-solve until weights settle (few steps suffice)
+            wts = np.ones(len(fit_rows))
+            for _ in range(10):
+                res = A[:, live] @ sol - y
+                new = np.where(np.abs(res) <= huber_delta, 1.0,
+                               huber_delta / np.maximum(np.abs(res), 1e-30))
+                if np.allclose(new, wts):
+                    break
+                wts = new
+                sw = np.sqrt(wts)
+                sol, _, rank, _ = np.linalg.lstsq(
+                    A[:, live] * sw[:, None], y * sw, rcond=None)
+                if rank < len(live) or not np.all(np.isfinite(sol)):
+                    return fallback("robust re-solve degenerated")
+        # scatter solution back; dead columns keep their current value
+        new_o, new_b = theta_o, theta_b
+        new_alpha = dict(alpha)
+        for j, v in zip(live, sol):
+            if cols[j] == "overhead":
+                new_o = max(float(v), 0.0)       # can't owe time back
+            elif cols[j] == "bw":
+                new_b = float(v) if v > 0 else theta_b
+            else:
+                new_alpha[cols[j]] = float(v) if v > 0 else alpha[cols[j]]
+        theta_o, theta_b, alpha = new_o, new_b, new_alpha
+        new_branches = _assign_branches(fit_rows, theta_o, theta_b, alpha)
+        if new_branches == branches:
+            break
+        branches = new_branches
+
+    # translate reciprocal-space theta back into spec constants.  The
+    # reference kind (largest total step mass) pins clock_hz; other
+    # kinds become ii multipliers relative to it.
+    mass = {k: 0.0 for k in kinds}
+    for _, items, groups in fit_rows:
+        for grid, _, steps in groups:
+            for k, s in steps.items():
+                mass[k] += items * grid * s
+    ref = max(kinds, key=lambda k: (mass[k], k))
+    clock = 1.0 / alpha[ref] if alpha[ref] > 0 else float(seed.clock_hz)
+    ii_scale = tuple((k, 1.0 if k == ref else alpha[k] * clock)
+                     for k in kinds)
+    fitted = dataclasses.replace(
+        CalibratedSpec(**{f.name: getattr(seed, f.name)
+                          for f in dataclasses.fields(TPUSpec)}),
+        clock_hz=clock, hbm_bw=1.0 / theta_b, step_overhead_s=theta_o,
+        ii_scale=ii_scale, n_rows=len(fit_rows),
+        calibration_version=CALIBRATION_VERSION)
+    params = {"step_overhead_s": theta_o, "inv_hbm_bw": theta_b}
+    params.update({f"alpha_{k}": alpha[k] for k in kinds})
+    return CalibrationResult(spec=fitted, fitted=True,
+                             n_rows=len(fit_rows), n_excluded=n_excl,
+                             n_unusable=n_bad, n_duplicates=n_dup,
+                             iterations=iterations, params=params)
+
+
+# ----------------------------------------------------------------------
+# persistence
+# ----------------------------------------------------------------------
+
+class CalibrationStore:
+    """Atomic on-disk store of fitted specs, beside the tuning cache.
+
+    One JSON file per ``(backend cache_key, device_kind)`` under
+    ``<root>/calibration/`` — same root as the
+    :class:`~repro.tune.store.TuningCache`, so one directory holds
+    everything learned about this machine.  Writes go through a temp
+    file + ``os.replace`` (never a torn record); records carry
+    :data:`CALIBRATION_VERSION` and readers skip other versions.
+    """
+
+    def __init__(self, root: str | None = None):
+        self.root = os.path.join(root or default_cache_root(),
+                                 "calibration")
+        self._memo: dict[str, CalibratedSpec | None] = {}
+        self._lock = threading.Lock()
+
+    def _path(self, backend_key: str, device_kind: str) -> str:
+        digest = hashlib.sha256(
+            json.dumps([backend_key, device_kind]).encode()
+        ).hexdigest()[:24]
+        return os.path.join(self.root, digest + ".json")
+
+    def get(self, backend_key: str,
+            device_kind: str) -> CalibratedSpec | None:
+        path = self._path(backend_key, device_kind)
+        with self._lock:
+            if path in self._memo:
+                return self._memo[path]
+        spec: CalibratedSpec | None = None
+        try:
+            with open(path) as f:
+                raw = json.load(f)
+            if raw.get("version") == CALIBRATION_VERSION:
+                spec = spec_from_json(raw["spec"])
+        except (OSError, ValueError, KeyError, TypeError):
+            spec = None
+        with self._lock:
+            self._memo[path] = spec
+        return spec
+
+    def put(self, backend_key: str, device_kind: str,
+            spec: CalibratedSpec, *,
+            result: CalibrationResult | None = None) -> str:
+        """Persist ``spec`` atomically; returns the record path."""
+        path = self._path(backend_key, device_kind)
+        record: dict[str, Any] = {
+            "version": CALIBRATION_VERSION,
+            "backend": backend_key,
+            "device_kind": device_kind,
+            "created_at": time.time(),
+            "spec": spec_to_json(spec),
+        }
+        if result is not None:
+            record["fit"] = {"n_rows": result.n_rows,
+                             "n_excluded": result.n_excluded,
+                             "n_unusable": result.n_unusable,
+                             "iterations": result.iterations,
+                             "params": result.params}
+        os.makedirs(self.root, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                f.write(json.dumps(record, indent=1))
+            os.replace(tmp, path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+        with self._lock:
+            self._memo[path] = spec
+        return path
+
+    def invalidate(self, backend_key: str, device_kind: str) -> None:
+        path = self._path(backend_key, device_kind)
+        with self._lock:
+            self._memo.pop(path, None)
+        try:
+            os.unlink(path)
+        except OSError:
+            pass
+
+    def clear(self) -> None:
+        with self._lock:
+            self._memo.clear()
+        try:
+            names = os.listdir(self.root)
+        except OSError:
+            return
+        for n in names:
+            if n.endswith(".json"):
+                try:
+                    os.unlink(os.path.join(self.root, n))
+                except OSError:
+                    pass
+
+
+# ----------------------------------------------------------------------
+# backend-facing entry points
+# ----------------------------------------------------------------------
+
+def calibrate_backend(backend, drift=None, *,
+                      store: CalibrationStore | None = None,
+                      device_kind: str | None = None,
+                      persist: bool = True,
+                      **fit_kw) -> CalibrationResult:
+    """Fit (and by default persist) a calibrated spec for ``backend``.
+
+    ``drift`` follows the :func:`repro.obs.drift.resolve_drift`
+    protocol (``None`` -> the default drift log, a path, a
+    :class:`~repro.obs.drift.DriftLog`) or may be a plain iterable of
+    rows.  On a successful fit the spec lands in ``store`` under the
+    backend's :meth:`~repro.backends.Backend.cache_key` and the
+    detected device kind, where ``compile_graph(calibrate="auto")``
+    finds it.
+    """
+    from repro.backends import resolve
+    be = resolve(backend)
+    if drift is None or isinstance(drift, (bool, str, DriftLog)):
+        from repro.obs.drift import resolve_drift
+        log = resolve_drift(True if drift is None else drift)
+        rows: Iterable[DriftRow] = log.rows() if log is not None else ()
+    else:
+        rows = drift
+    result = calibrate(rows, spec=be.spec, **fit_kw)
+    if result.fitted and persist:
+        if device_kind is None:
+            device_kind = detect_device_kind()
+        (store or CalibrationStore()).put(
+            be.cache_key(), device_kind, result.spec, result=result)
+    return result
+
+
+def load_calibration(backend, *, store: CalibrationStore | None = None,
+                     device_kind: str | None = None) -> CalibratedSpec | None:
+    """The persisted calibrated spec for ``backend`` here, or None."""
+    from repro.backends import resolve
+    be = resolve(backend)
+    if device_kind is None:
+        device_kind = detect_device_kind()
+    return (store or CalibrationStore()).get(be.cache_key(), device_kind)
+
+
+def resolve_calibration(backend, calibrate: Any = "auto", *,
+                        store: CalibrationStore | None = None,
+                        device_kind: str | None = None,
+                        drift=None) -> TPUSpec | None:
+    """Normalize a user-facing ``calibrate=`` argument into a spec.
+
+    ``None``/``False`` opt out (returns None — the caller keeps the
+    seed spec and, crucially, its digest); a
+    :class:`~repro.core.vectorize.TPUSpec` instance passes through;
+    ``"auto"``/``True`` loads the persisted spec for this backend +
+    device kind, fitting one from the drift log first when the store
+    is empty but enough rows have accumulated.  An unusable value
+    raises :class:`TypeError` — silently ignoring a typo'd
+    ``calibrate="atuo"`` would quietly serve uncalibrated priors.
+    """
+    if calibrate is None or calibrate is False:
+        return None
+    if isinstance(calibrate, TPUSpec):
+        return calibrate
+    if calibrate is True:
+        calibrate = "auto"
+    if calibrate != "auto":
+        raise TypeError(f"calibrate must be 'auto', True/False/None or a "
+                        f"TPUSpec; got {calibrate!r}")
+    spec = load_calibration(backend, store=store, device_kind=device_kind)
+    if spec is not None:
+        return spec
+    from repro.obs.drift import resolve_drift
+    log = resolve_drift(drift)
+    if log is None:
+        return None
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        result = calibrate_backend(backend, log, store=store,
+                                   device_kind=device_kind)
+    return result.spec if result.fitted else None

@@ -55,7 +55,7 @@ import numpy as np
 from repro.core.schedule import Schedule, build_schedule
 from repro.core.vectorize import (DEFAULT_MAX_TILE, TPUSpec, V5E,
                                   modeled_schedule_time, scale_spec,
-                                  sweep_vector_factor)
+                                  schedule_features, sweep_vector_factor)
 from repro.obs.drift import DriftLog, resolve_drift
 from repro.obs.tracer import maybe_span, resolve_tracer
 from repro.tune.store import (ScheduleConfig, TuningCache, TuningKey,
@@ -99,6 +99,8 @@ class TuningResult:
     trials: list[Trial]
     n_measurements: int
     record: TuningRecord
+    #: candidates skipped on the calibrated prior without measuring
+    n_pruned: int = 0
 
     def notes(self) -> list[str]:
         """Provenance lines for ``Schedule.diagnostics``."""
@@ -116,6 +118,9 @@ class TuningResult:
                     f"best={best * 1e6:.1f}us analytic={base * 1e6:.1f}us "
                     f"({base / best:.2f}x)" if best else
                     f"[tune] measured {self.n_measurements} candidates")
+            if self.n_pruned:
+                lines.append(f"[tune] calibrated prior pruned "
+                             f"{self.n_pruned} candidates unmeasured")
         return lines
 
 
@@ -187,12 +192,12 @@ def _model_config(graph, spec: TPUSpec, max_tile: tuple[int, int],
 
 
 def _modeled_for(graph, cfg: ScheduleConfig, spec: TPUSpec,
-                 build_kwargs: dict) -> float:
-    """Whole-app modeled seconds for one candidate config."""
+                 build_kwargs: dict) -> tuple[float, dict]:
+    """Whole-app modeled seconds + drift features for one candidate."""
     sched = build_schedule(graph, spec=scale_spec(spec, cfg.vmem_fraction),
                            group_vector_factors=cfg.group_vf,
                            max_tile=cfg.max_tile, **build_kwargs)
-    return modeled_schedule_time(sched, spec)
+    return modeled_schedule_time(sched, spec), schedule_features(sched)
 
 
 def tune_graph(graph, backend="pallas", *,
@@ -208,7 +213,8 @@ def tune_graph(graph, backend="pallas", *,
                    DEFAULT_MAX_TILE, (128, 1024)),
                vmem_fractions: Sequence[float] = (1.0,),
                force: bool = False, trace: Any = None,
-               drift: Any = None) -> TuningResult:
+               drift: Any = None, calibrate: Any = None,
+               prior_ratio: float = 1.3) -> TuningResult:
     """Search the schedule space for ``graph`` by measuring candidates.
 
     The search space is the per-group vector factor (top-``top_k`` by
@@ -229,12 +235,29 @@ def tune_graph(graph, backend="pallas", *,
     cache (``drift.jsonl`` under ``cache.root``), the data ROADMAP
     item 3's calibration pass consumes.  ``drift=False`` disables the
     rows, ``drift=`` a :class:`~repro.obs.drift.DriftLog`/path
-    redirects them.
+    redirects them.  Every trial row carries the candidate schedule's
+    cost-model **features** so it can feed the calibration fit.
+
+    ``calibrate`` (same protocol as ``compile_graph``) swaps in the
+    fitted :class:`~repro.tune.calibrate.CalibratedSpec` for this
+    backend + device kind before the search starts.  Under a
+    calibrated spec the model is trusted further: a candidate whose
+    modeled time exceeds ``prior_ratio`` times the best modeled time
+    seen so far is **pruned without measuring** (counted in
+    ``n_pruned``), so a calibrated search reaches the same winner in
+    strictly fewer measurements than an uncalibrated one whenever the
+    fitted model ranks the pruned candidates correctly.  An
+    *uncalibrated* spec never prunes — the seed model has not earned
+    that trust (ROADMAP item 3).
     """
-    from repro.backends import resolve
-    be = resolve(backend)
+    from repro.backends import resolve_calibrated
+    be = resolve_calibrated(backend, calibrate)
     be.require("tuning")
     spec = spec or be.spec
+    # pruning is gated on evidence: only a spec that went through the
+    # calibration fit (carries fitted per-kind ii multipliers) may veto
+    # measurements on modeled time alone
+    prune = bool(getattr(spec, "ii_scale", ())) and prior_ratio is not None
     # NOT `cache or ...`: an empty TuningCache is falsy (__len__ == 0)
     # and must still be used, not silently swapped for the default root
     cache = cache if cache is not None else TuningCache()
@@ -258,7 +281,7 @@ def tune_graph(graph, backend="pallas", *,
         if rec is not None:
             return TuningResult(key_pre, rec.config, "cache", [], 0, rec)
 
-    counter = {"n": 0}
+    counter = {"n": 0, "pruned": 0}
     if measure is None:
         # the backend's measurement hook is the harness; the seeds all
         # point it at default_measure (lower + time on the live device)
@@ -277,12 +300,18 @@ def tune_graph(graph, backend="pallas", *,
 
     trials: list[Trial] = []
     seen: set[ScheduleConfig] = set()
+    best_modeled = [float("inf")]
 
-    def try_config(label: str, cfg: ScheduleConfig,
-                   modeled_s: float) -> Trial | None:
+    def try_config(label: str, cfg: ScheduleConfig, modeled_s: float,
+                   features: dict | None = None) -> Trial | None:
         if cfg in seen or counter["n"] >= max_trials:
             return None
         seen.add(cfg)
+        if modeled_s > 0:
+            best_modeled[0] = min(best_modeled[0], modeled_s)
+        if prune and modeled_s > prior_ratio * best_modeled[0]:
+            counter["pruned"] += 1
+            return None
         with maybe_span(tracer, "tune.trial", cat="tune",
                         graph=graph.name, label=label) as sp:
             measured_s = timed(cfg)
@@ -291,9 +320,11 @@ def tune_graph(graph, backend="pallas", *,
         trials.append(t)
         if drift_log is not None:
             # sig/shapes bind late: set post-canonicalization, below
+            attrs = dict(label=label, device=device_kind)
+            if features is not None:
+                attrs["features"] = features
             drift_log.record("trial", drift_sig, drift_shapes, be.name,
-                             modeled_s, measured_s, label=label,
-                             device=device_kind)
+                             modeled_s, measured_s, **attrs)
         return t
 
     # ---- analytic baseline: the model's pick, measured first --------
@@ -317,7 +348,8 @@ def tune_graph(graph, backend="pallas", *,
         return TuningResult(key_pre, baseline_cfg, "measured", [], 0, rec)
 
     analytic = try_config("analytic", baseline_cfg,
-                          modeled_schedule_time(baseline_sched, spec))
+                          modeled_schedule_time(baseline_sched, spec),
+                          schedule_features(baseline_sched))
     assert analytic is not None
     best = analytic
 
@@ -333,16 +365,17 @@ def tune_graph(graph, backend="pallas", *,
             vfs = list(best.config.group_vf)
             vfs[gi] = r["vector_factor"]
             cand = dataclasses.replace(best.config, group_vf=tuple(vfs))
+            mod_s, feats = _modeled_for(graph, cand, spec, build_kwargs)
             t = try_config(f"g{gi}:vf{r['vector_factor']}", cand,
-                           _modeled_for(graph, cand, spec, build_kwargs))
+                           mod_s, feats)
             if t is not None and t.measured_s < best.measured_s:
                 best = t
 
     # ---- axis 2: tile-height cap ------------------------------------
     for mt in max_tile_candidates[1:]:
         cand = dataclasses.replace(best.config, max_tile=tuple(mt))
-        t = try_config(f"max_tile{tuple(mt)}", cand,
-                       _modeled_for(graph, cand, spec, build_kwargs))
+        mod_s, feats = _modeled_for(graph, cand, spec, build_kwargs)
+        t = try_config(f"max_tile{tuple(mt)}", cand, mod_s, feats)
         if t is not None and t.measured_s < best.measured_s:
             best = t
 
@@ -353,19 +386,21 @@ def tune_graph(graph, backend="pallas", *,
         cfg_f, sched_f = _model_config(graph, spec, best.config.max_tile,
                                        frac, build_kwargs)
         t = try_config(f"vmem{frac:g}", cfg_f,
-                       modeled_schedule_time(sched_f, spec))
+                       modeled_schedule_time(sched_f, spec),
+                       schedule_features(sched_f))
         if t is not None and t.measured_s < best.measured_s:
             best = t
 
     rec = TuningRecord(config=best.config, source="measured",
                        best_measured_s=best.measured_s,
                        analytic_measured_s=analytic.measured_s,
-                       modeled_s=best.modeled_s, n_trials=counter["n"])
+                       modeled_s=best.modeled_s, n_trials=counter["n"],
+                       n_pruned=counter["pruned"])
     cache.put(key_post, rec, aliases=(key_pre,))
     if drift_log is not None:
         drift_log.flush()       # trial rows persist with the record
     return TuningResult(key_pre, best.config, "measured", trials,
-                        counter["n"], rec)
+                        counter["n"], rec, n_pruned=counter["pruned"])
 
 
 def resolve_tuning(graph, backend, *, tune: Any,

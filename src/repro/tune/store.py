@@ -146,6 +146,9 @@ class TuningRecord:
     analytic_measured_s: float | None = None
     modeled_s: float | None = None
     n_trials: int = 0
+    #: candidates the calibrated prior skipped without measuring
+    #: (0 for uncalibrated searches and pre-calibration records)
+    n_pruned: int = 0
     created_at: float = 0.0
     version: int = RECORD_VERSION
 
@@ -159,6 +162,7 @@ class TuningRecord:
                 "best_measured_s": self.best_measured_s,
                 "analytic_measured_s": self.analytic_measured_s,
                 "modeled_s": self.modeled_s, "n_trials": self.n_trials,
+                "n_pruned": self.n_pruned,
                 "created_at": self.created_at}
 
     @classmethod
@@ -169,6 +173,7 @@ class TuningRecord:
                    analytic_measured_s=d.get("analytic_measured_s"),
                    modeled_s=d.get("modeled_s"),
                    n_trials=int(d.get("n_trials", 0)),
+                   n_pruned=int(d.get("n_pruned", 0)),
                    created_at=float(d.get("created_at", 0.0)),
                    version=int(d.get("version", 0)))
 

@@ -256,6 +256,91 @@ def test_spearman_ties_and_degenerate():
     assert spearman([1, 2, 3], [1, 2, 3]) == pytest.approx(1.0)
     assert np.isnan(spearman([1.0], [2.0]))
     assert np.isnan(spearman([1, 1, 1], [1, 2, 3]))
+    # partial ties average ranks instead of breaking arbitrarily
+    assert spearman([1, 2, 2, 3], [1, 2, 2, 3]) == pytest.approx(1.0)
+    with pytest.raises(ValueError):
+        spearman([1, 2], [1, 2, 3])
+
+
+def _row(modeled, measured, kind="launch", sig="sig", attrs=None):
+    from repro.obs.drift import DriftRow
+    return DriftRow(kind, sig, [[8, 128]], "xla", modeled, measured, attrs)
+
+
+def test_drift_report_skips_and_counts_sick_rows():
+    # NaN/inf/nonpositive on either side must be dropped AND counted —
+    # not poison every statistic, not vanish silently
+    clean = [_row(1e-5, 2e-5), _row(2e-5, 3e-5), _row(3e-5, 5e-5)]
+    sick = [_row(float("nan"), 1e-5), _row(1e-5, float("inf")),
+            _row(0.0, 1e-5), _row(1e-5, -1e-5)]
+    rep = drift_report(clean + sick)
+    assert rep["n"] == 3 and rep["skipped"] == 4
+    assert rep["spearman"] == pytest.approx(1.0)
+    assert np.isfinite(rep["bias"]) and np.isfinite(rep["log10_spread"])
+
+
+def test_drift_report_all_sick_rows():
+    rep = drift_report([_row(float("nan"), 1e-5), _row(1e-5, 0.0)])
+    assert rep["n"] == 0 and rep["skipped"] == 2
+    assert np.isnan(rep["spearman"]) and np.isnan(rep["bias"])
+    assert rep["groups"] == {} and rep["by_kind"] == {}
+
+
+def test_drift_report_all_tied_and_single_row():
+    # all-tied modeled: rank correlation is undefined (nan), but the
+    # bias is still a perfectly good constant to report
+    tied = drift_report([_row(1e-5, 1e-4), _row(1e-5, 2e-4),
+                         _row(1e-5, 3e-4)])
+    assert np.isnan(tied["spearman"])
+    assert tied["bias"] == pytest.approx(20.0)
+    single = drift_report([_row(1e-5, 2e-5)])
+    assert single["n"] == 1 and np.isnan(single["spearman"])
+    assert single["bias"] == pytest.approx(2.0)
+
+
+def test_drift_report_with_spec_rescoring():
+    # rows carrying features are re-scored under the given spec; rows
+    # without features are counted, not guessed at
+    class Spec:
+        clock_hz, hbm_bw, step_overhead_s = 1e9, 1e9, 1e-3
+
+    feats = {"groups": [{"grid": 2, "bytes_step": 10.0,
+                         "steps": {"point": 100.0}}]}
+    with_f = [_row(1e-5, 2.1e-3, attrs={"features": dict(feats)}),
+              _row(2e-5, 2.0e-3, attrs={"features": dict(feats)})]
+    without = [_row(3e-5, 4e-5)]
+    rep = drift_report(with_f + without, spec=Spec())
+    ws = rep["with_spec"]
+    assert ws["n"] == 2 and ws["without_features"] == 1
+    # predicted 2*(1ms + 100ns) for both rows: bias ~1, spearman nan
+    assert ws["bias"] == pytest.approx(1.0, rel=0.1)
+    assert np.isnan(ws["spearman"])
+    # without spec= the key is absent entirely
+    assert "with_spec" not in drift_report(with_f)
+
+
+def test_drift_row_features_roundtrip_disk(tmp_path):
+    # features ride attrs through the JSONL file bit-for-bit, and the
+    # accessor is None (not a crash) for rows that predate them
+    from repro.obs.drift import DriftRow, predict_features
+    log = DriftLog(str(tmp_path / "f.jsonl"))
+    feats = {"groups": [{"grid": 4, "bytes_step": 1000.0,
+                         "steps": {"stencil": 2000.0}}], "items": 2}
+    log.record("launch", "sig", [[8, 128]], "xla", 1e-5, 2e-5,
+               features=feats)
+    log.record("launch", "sig", [[8, 128]], "xla", 1e-5, 2e-5)
+    log.flush()
+    rows = DriftLog(log.path).rows()
+    assert rows[0].features == feats
+    assert rows[1].features is None
+    class Spec:
+        clock_hz, hbm_bw, step_overhead_s = 1e9, 1e9, 1e-6
+    # items multiplies through the reconstituted prediction
+    assert predict_features(rows[0].features, Spec()) == pytest.approx(
+        2 * 4 * (1e-6 + 2e-6), rel=1e-12)
+    # malformed features (wrong type) read back as None, not a crash
+    assert DriftRow("launch", "s", None, "xla", 1e-5, 2e-5,
+                    {"features": "oops"}).features is None
 
 
 def test_resolve_drift_semantics(tmp_path, monkeypatch):
