@@ -1,0 +1,195 @@
+"""Benchmark regression gate: fresh run vs checked-in baselines.
+
+``python benchmarks/compare.py`` diffs the JSON a fresh benchmark run
+dropped into ``experiments/`` against the checked-in repo-root
+baselines (``BENCH_serving.json`` / ``BENCH_parallel.json`` /
+``BENCH_tuning.json``) and fails when a measured metric regressed
+past its relative tolerance — the CI step that turns a silent
+throughput/latency regression into a red build with a readable delta
+table instead of a number nobody ever opens.
+
+Rows are matched by **identity**: the row ``name`` plus every
+non-metric scalar in the row (``h``, ``w``, ``n``, ``app``,
+``vector_factor``, ...).  That matters because CI runs ``--smoke``
+with smaller shapes than the full-run baselines — a smoke
+``parallel_vf2`` at 64x1024 must never be timed against the full
+256x640 baseline, so unmatched rows are *reported and skipped*, not
+compared.  Only rows whose identity matches exactly gate the build.
+
+Metrics and directions: ``us`` (lower is better) and
+``throughput_rps`` (higher is better).  A row fails when it is more
+than ``(1 + tol)`` times worse than its baseline; ``--tol`` defaults
+to 2.0 (a 3x regression fails) because shared CI hosts jitter
+small-shape timings enormously — the gate exists to catch
+order-of-magnitude breakage, while fine-grained tracking lives in
+the checked-in baselines' git history.
+
+Exit status: 0 clean, 1 regression, and missing files are skipped
+with a warning unless ``--strict`` (so the gate guards whatever
+actually ran).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Any
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+#: metric -> direction; every other scalar row key is identity
+METRICS: dict[str, str] = {
+    "us": "lower",
+    "throughput_rps": "higher",
+    "modeled_us": "ignore",          # model output, not a measurement
+    "modeled_speedup": "ignore",
+    "budget_ms": "ignore",
+    "latency_p50_ms": "ignore",      # tracked, but p99-of-smoke flaps
+    "latency_p99_ms": "ignore",
+}
+
+#: default (baseline, fresh) pairs the CI step checks
+DEFAULT_PAIRS = [
+    ("BENCH_serving.json", os.path.join("experiments",
+                                        "bench_serving.json")),
+    ("BENCH_parallel.json", os.path.join("experiments",
+                                         "bench_parallel.json")),
+    ("BENCH_tuning.json", os.path.join("experiments",
+                                       "bench_tuning.json")),
+]
+
+
+def row_key(row: dict[str, Any]) -> tuple:
+    """Hashable identity of a benchmark row: name + non-metric scalars."""
+    parts = [("name", str(row.get("name")))]
+    for k in sorted(row):
+        if k == "name" or k in METRICS:
+            continue
+        v = row[k]
+        if isinstance(v, (list, tuple, dict)):
+            v = json.dumps(v, sort_keys=True)
+        parts.append((k, str(v)))
+    return tuple(parts)
+
+
+def compare_rows(baseline: list[dict[str, Any]],
+                 fresh: list[dict[str, Any]], *,
+                 tol: float = 2.0) -> dict[str, Any]:
+    """Diff two row lists; returns deltas + match accounting.
+
+    Each delta is ``{"name", "metric", "baseline", "fresh", "ratio",
+    "ok"}`` where ``ratio`` is fresh/baseline and ``ok`` applies the
+    metric's direction with relative tolerance ``tol``.
+    """
+    base_by_key = {row_key(r): r for r in baseline}
+    fresh_by_key = {row_key(r): r for r in fresh}
+    matched = sorted(base_by_key.keys() & fresh_by_key.keys())
+    deltas: list[dict[str, Any]] = []
+    for key in matched:
+        b, f = base_by_key[key], fresh_by_key[key]
+        for metric, direction in METRICS.items():
+            if direction == "ignore":
+                continue
+            bv, fv = b.get(metric), f.get(metric)
+            if not (isinstance(bv, (int, float))
+                    and isinstance(fv, (int, float)) and bv > 0 and fv > 0):
+                continue
+            ratio = fv / bv
+            ok = (ratio <= 1.0 + tol if direction == "lower"
+                  else ratio >= 1.0 / (1.0 + tol))
+            deltas.append({"name": dict(key)["name"], "key": key,
+                           "metric": metric, "baseline": bv, "fresh": fv,
+                           "ratio": ratio, "ok": ok})
+    return {
+        "deltas": deltas,
+        "matched": len(matched),
+        "unmatched_baseline": len(base_by_key.keys() - fresh_by_key.keys()),
+        "unmatched_fresh": len(fresh_by_key.keys() - base_by_key.keys()),
+        "failures": [d for d in deltas if not d["ok"]],
+    }
+
+
+def compare_files(baseline_path: str, fresh_path: str, *,
+                  tol: float = 2.0) -> dict[str, Any]:
+    """Diff two benchmark JSON files (``{"rows": [...]}`` payloads)."""
+    with open(baseline_path) as f:
+        base = json.load(f)
+    with open(fresh_path) as f:
+        fresh = json.load(f)
+    out = compare_rows(base.get("rows", []), fresh.get("rows", []),
+                       tol=tol)
+    out["baseline_path"] = baseline_path
+    out["fresh_path"] = fresh_path
+    out["baseline_smoke"] = bool(base.get("smoke"))
+    out["fresh_smoke"] = bool(fresh.get("smoke"))
+    return out
+
+
+def format_table(result: dict[str, Any]) -> str:
+    """A readable delta table for one file pair."""
+    lines = [f"{os.path.basename(result['baseline_path'])} "
+             f"(baseline{' smoke' if result['baseline_smoke'] else ''}) "
+             f"vs {result['fresh_path']}"
+             f"{' (smoke)' if result['fresh_smoke'] else ''}: "
+             f"{result['matched']} matched, "
+             f"{result['unmatched_baseline']} baseline-only, "
+             f"{result['unmatched_fresh']} fresh-only"]
+    if result["deltas"]:
+        w = max(len(d["name"]) for d in result["deltas"])
+        lines.append(f"  {'row':<{w}}  {'metric':<15} "
+                     f"{'baseline':>12} {'fresh':>12} {'ratio':>7}")
+        for d in result["deltas"]:
+            flag = "   " if d["ok"] else " <<< REGRESSION"
+            lines.append(f"  {d['name']:<{w}}  {d['metric']:<15} "
+                         f"{d['baseline']:>12.3g} {d['fresh']:>12.3g} "
+                         f"{d['ratio']:>6.2f}x{flag}")
+    return "\n".join(lines)
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--tol", type=float, default=2.0,
+                    help="relative tolerance: fail when a row is more "
+                         "than (1+tol)x worse than baseline")
+    ap.add_argument("--strict", action="store_true",
+                    help="fail on missing files instead of skipping")
+    ap.add_argument("pairs", nargs="*",
+                    help="baseline:fresh path pairs (default: the three "
+                         "checked-in BENCH_*.json vs experiments/)")
+    args = ap.parse_args(argv)
+    if args.pairs:
+        pairs = []
+        for p in args.pairs:
+            base, _, fresh = p.partition(":")
+            if not fresh:
+                ap.error(f"pair {p!r} must be baseline:fresh")
+            pairs.append((base, fresh))
+    else:
+        pairs = [(os.path.join(_ROOT, b), os.path.join(_ROOT, f))
+                 for b, f in DEFAULT_PAIRS]
+    failed = False
+    compared = 0
+    for base, fresh in pairs:
+        missing = [p for p in (base, fresh) if not os.path.exists(p)]
+        if missing:
+            print(f"skip {os.path.basename(base)}: missing "
+                  + ", ".join(missing))
+            if args.strict:
+                failed = True
+            continue
+        result = compare_files(base, fresh, tol=args.tol)
+        print(format_table(result))
+        compared += result["matched"]
+        if result["failures"]:
+            failed = True
+    if compared == 0:
+        print("warning: no rows matched — identity keys (shape/app) "
+              "differ between baseline and fresh runs")
+    print("regression gate:", "FAIL" if failed else
+          f"ok ({compared} rows within tolerance)")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -117,14 +117,37 @@ class DriftLog:
     every ``_FLUSH_EVERY`` records, on :meth:`flush`, and at
     interpreter exit — the serving hot path never waits on a write.
     A missing parent directory is created on first flush.
+
+    ``max_rows`` bounds on-disk growth under long-running serving:
+    when a flush pushes the live file past the cap it **rotates** —
+    the live file replaces ``<path>.1`` (whose previous contents
+    disappear from visibility and are counted in
+    :attr:`rotated_rows`) and a fresh live file starts.
+    :meth:`rows`, :func:`drift_report` and the sentinel's windows read
+    ``<path>.1`` *then* the live file, so at most ``2 * max_rows``
+    recent rows stay visible and rotation never yanks history out
+    from under a rolling window mid-scan.  ``max_rows=None`` (the
+    default) keeps the pre-rotation unbounded behaviour.
     """
 
-    def __init__(self, path: str | None = None):
+    def __init__(self, path: str | None = None, *,
+                 max_rows: int | None = None):
+        if max_rows is not None and max_rows < 1:
+            raise ValueError(f"max_rows must be >= 1, got {max_rows}")
         self.path = path if path is not None else default_drift_path()
+        self.max_rows = max_rows
+        #: rows retired from visibility by rotation (process lifetime)
+        self.rotated_rows = 0
+        self._disk_rows: int | None = None    # live-file rows, lazy count
         self._buf: list[dict[str, Any]] = []
         self._lock = threading.Lock()
         import atexit
         atexit.register(self.flush)
+
+    @property
+    def rotated_path(self) -> str:
+        """Where the previous generation lives after a rotation."""
+        return self.path + ".1"
 
     def record(self, kind: str, signature: str, shapes: Any,
                backend: str, modeled_s: float, measured_s: float,
@@ -137,6 +160,14 @@ class DriftLog:
         if need_flush:
             self.flush()
 
+    @staticmethod
+    def _count_lines(path: str) -> int:
+        try:
+            with open(path) as f:
+                return sum(1 for line in f if line.strip())
+        except OSError:
+            return 0
+
     def flush(self) -> None:
         with self._lock:
             if not self._buf:
@@ -144,40 +175,59 @@ class DriftLog:
             rows, self._buf = self._buf, []
         parent = os.path.dirname(os.path.abspath(self.path))
         os.makedirs(parent, exist_ok=True)
-        with open(self.path, "a") as f:
-            for row in rows:
-                f.write(json.dumps(row) + "\n")
+        with self._lock:
+            if self._disk_rows is None:
+                self._disk_rows = self._count_lines(self.path)
+            with open(self.path, "a") as f:
+                for row in rows:
+                    f.write(json.dumps(row) + "\n")
+            self._disk_rows += len(rows)
+            if (self.max_rows is not None
+                    and self._disk_rows > self.max_rows):
+                retiring = self._count_lines(self.rotated_path)
+                try:
+                    os.replace(self.path, self.rotated_path)
+                except OSError:
+                    return             # rotation is best-effort
+                self.rotated_rows += retiring
+                self._disk_rows = 0
+
+    @staticmethod
+    def _read_rows(path: str, out: list[DriftRow]) -> None:
+        if not os.path.exists(path):
+            return
+        with open(path) as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    out.append(DriftRow.from_dict(json.loads(line)))
+                except (json.JSONDecodeError, TypeError):
+                    continue           # torn write: skip, keep reading
 
     def rows(self) -> list[DriftRow]:
-        """All rows: what's on disk plus the unflushed buffer."""
+        """All visible rows, oldest first: the rotated generation (if
+        any), then the live file, then the unflushed buffer."""
         out: list[DriftRow] = []
-        if os.path.exists(self.path):
-            with open(self.path) as f:
-                for line in f:
-                    line = line.strip()
-                    if not line:
-                        continue
-                    try:
-                        out.append(DriftRow.from_dict(json.loads(line)))
-                    except (json.JSONDecodeError, TypeError):
-                        continue       # torn write: skip, keep reading
+        self._read_rows(self.rotated_path, out)
+        self._read_rows(self.path, out)
         with self._lock:
             out.extend(DriftRow.from_dict(d) for d in self._buf)
         return out
 
     def __len__(self) -> int:
-        n = 0
-        if os.path.exists(self.path):
-            with open(self.path) as f:
-                n = sum(1 for line in f if line.strip())
+        n = self._count_lines(self.rotated_path) + self._count_lines(self.path)
         with self._lock:
             return n + len(self._buf)
 
     def clear(self) -> None:
         with self._lock:
             self._buf.clear()
-        if os.path.exists(self.path):
-            os.remove(self.path)
+            self._disk_rows = 0
+        for path in (self.path, self.rotated_path):
+            if os.path.exists(path):
+                os.remove(path)
 
 
 def resolve_drift(drift: Any) -> DriftLog | None:

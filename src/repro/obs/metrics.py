@@ -98,7 +98,7 @@ class Histogram:
     """
 
     __slots__ = ("name", "capacity", "_seed", "_samples", "_count",
-                 "_rand", "_lock")
+                 "_sum", "_rand", "_lock")
 
     def __init__(self, name: str, capacity: int = 4096, seed: int = 0):
         if capacity < 1:
@@ -108,6 +108,7 @@ class Histogram:
         self._seed = seed
         self._samples: list[float] = []
         self._count = 0
+        self._sum = 0.0
         self._rand = random.Random(f"{name}:{seed}")
         self._lock = threading.Lock()
 
@@ -121,44 +122,70 @@ class Histogram:
                 self._observe(x)
 
     def _observe(self, x: float) -> None:
+        x = float(x)
         self._count += 1
+        if np.isfinite(x):          # a NaN/inf sample must not poison sum
+            self._sum += x
         if len(self._samples) < self.capacity:
-            self._samples.append(float(x))
+            self._samples.append(x)
             return
         j = self._rand.randrange(self._count)
         if j < self.capacity:
-            self._samples[j] = float(x)
+            self._samples[j] = x
 
     @property
     def count(self) -> int:
         """Total observations (not just the retained samples)."""
         return self._count
 
+    @property
+    def sum(self) -> float:
+        """Running sum of every *finite* observation (whole stream)."""
+        return self._sum
+
     def samples(self) -> list[float]:
         with self._lock:
             return list(self._samples)
 
-    def percentile(self, q: float) -> float:
+    def finite_samples(self) -> list[float]:
+        """Retained samples with NaN/inf filtered out.
+
+        A hung launch or wrapped clock can observe a non-finite value;
+        keeping it in the reservoir is honest accounting, but every
+        percentile/mean consumer (and any exported JSON) wants only
+        the digestible part.
+        """
         with self._lock:
-            if not self._samples:
-                return 0.0
-            return float(np.percentile(np.asarray(self._samples), q))
+            return [x for x in self._samples if np.isfinite(x)]
+
+    def percentile(self, q: float) -> float:
+        xs = self.finite_samples()
+        if not xs:
+            return 0.0
+        return float(np.percentile(np.asarray(xs), q))
 
     def mean(self) -> float:
-        with self._lock:
-            return float(np.mean(self._samples)) if self._samples else 0.0
+        xs = self.finite_samples()
+        return float(np.mean(xs)) if xs else 0.0
 
     def max(self) -> float:
-        with self._lock:
-            return max(self._samples) if self._samples else 0.0
+        xs = self.finite_samples()
+        return max(xs) if xs else 0.0
 
-    def summary(self) -> dict[str, float]:
-        with self._lock:
-            xs = np.asarray(self._samples) if self._samples else None
-        if xs is None:
-            return {"count": self._count, "mean": 0.0, "p50": 0.0,
-                    "p99": 0.0, "max": 0.0}
-        return {"count": self._count, "mean": float(np.mean(xs)),
+    def summary(self) -> dict[str, Any]:
+        """JSON-ready stats: ``None`` (never NaN) when nothing usable.
+
+        ``count`` is the whole observation stream, ``samples`` the
+        finite retained reservoir the percentiles come from — a
+        ``samples == 0`` summary carries ``None`` percentiles so an
+        empty reservoir can never masquerade as a 0-latency one.
+        """
+        xs = np.asarray(self.finite_samples())
+        if not len(xs):
+            return {"count": self._count, "samples": 0, "sum": self._sum,
+                    "mean": None, "p50": None, "p99": None, "max": None}
+        return {"count": self._count, "samples": int(len(xs)),
+                "sum": self._sum, "mean": float(np.mean(xs)),
                 "p50": float(np.percentile(xs, 50)),
                 "p99": float(np.percentile(xs, 99)),
                 "max": float(xs.max())}
@@ -167,6 +194,7 @@ class Histogram:
         with self._lock:
             self._samples.clear()
             self._count = 0
+            self._sum = 0.0
             self._rand = random.Random(f"{self.name}:{self._seed}")
 
     def as_value(self) -> dict[str, float]:

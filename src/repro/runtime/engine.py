@@ -64,11 +64,12 @@ from repro.core.graph import DataflowGraph
 from repro.core.host import CompiledApp
 from repro.core.vectorize import modeled_schedule_time, schedule_features
 from repro.obs.drift import resolve_drift
+from repro.obs.health import SLO, HealthMonitor
 from repro.obs.tracer import resolve_tracer
 from repro.runtime.batching import MicroBatcher
 from repro.runtime.cache import CompileCache
 from repro.runtime.slots import SlotPool
-from repro.runtime.telemetry import (_SERVICE_ALPHA, Telemetry,
+from repro.runtime.telemetry import (_SERVICE_ALPHA, PHASES, Telemetry,
                                      modeled_latency)
 
 __all__ = ["QueueFullError", "CancelledError", "StreamRequest",
@@ -252,6 +253,16 @@ class StreamEngine:
     ``report()`` carries each app's tile provenance
     (``model`` / ``measured`` / ``cache``) so an operator can tell
     which regime a serving schedule came from.
+
+    The observability plane (PR 10, ``docs/observability.md``):
+    ``slo=`` sets the :class:`~repro.obs.health.SLO` that
+    :meth:`health` (and a rate-limited worker-loop sweep) evaluates
+    with hysteresis; ``sentinel=True`` (with ``drift=``) arms the
+    :class:`~repro.obs.sentinel.DriftSentinel` that auto-refits the
+    calibrated cost model when its drift statistics decay; and
+    :meth:`openmetrics` / :meth:`serve_metrics` expose everything as
+    an OpenMetrics scrape with stable ``backend``/``device``/``app``
+    labels.
     """
 
     def __init__(self, *, backend="pallas", max_queue: int = 64,
@@ -265,7 +276,8 @@ class StreamEngine:
                  app_weights: Mapping[str, float] | None = None,
                  max_pending: int | None = None,
                  autostart: bool = True, trace: Any = None,
-                 drift: Any = None, **compile_kwargs: Any):
+                 drift: Any = None, slo: SLO | None = None,
+                 sentinel: Any = None, **compile_kwargs: Any):
         from repro.backends import resolve
         #: the resolved Backend record: its donation policy and staging
         #: slack configure the MicroBatcher, its cache_key() keys every
@@ -285,6 +297,16 @@ class StreamEngine:
         # an `is not None` check, so the untraced engine pays nothing
         self.tracer = resolve_tracer(trace)
         self.drift = resolve_drift(drift)
+        self._backend_key = self.backend.cache_key()
+        # SLO health monitor: always present (engine.health() must
+        # answer), objectives default to the latency budget + a 5%
+        # shed-rate ceiling unless the caller passes an SLO
+        self._health = HealthMonitor(
+            slo if slo is not None else SLO(latency_p99_s=latency_budget),
+            registry=self.telemetry.registry, tracer=self.tracer)
+        # drift sentinel: off unless asked (True/SentinelPolicy/instance)
+        self.sentinel = self._resolve_sentinel(sentinel)
+        self._metrics_server: Any = None
         self._modeled_s: dict[str, float] = {}   # sig -> modeled s/item
         self._features: dict[str, dict] = {}     # sig -> drift features
         self._launched: set[tuple[str, int]] = set()  # warm (sig, width)
@@ -452,6 +474,146 @@ class StreamEngine:
         return out
 
     # ------------------------------------------------------------------
+    # observability plane: health, sentinel, OpenMetrics
+    # ------------------------------------------------------------------
+    def _resolve_sentinel(self, sentinel: Any):
+        """Normalize the ``sentinel=`` argument (None/False = off)."""
+        if sentinel is None or sentinel is False:
+            return None
+        from repro.obs.sentinel import DriftSentinel, SentinelPolicy
+        if isinstance(sentinel, DriftSentinel):
+            # adopt a pre-built sentinel into this engine's telemetry
+            # plane (unless the caller already wired its own sinks) so
+            # its checks/refits land in the same exposition
+            if sentinel.registry is None:
+                sentinel.registry = self.telemetry.registry
+            if sentinel.tracer is None:
+                sentinel.tracer = self.tracer
+            return sentinel
+        if self.drift is None:
+            raise ValueError("sentinel= needs drift rows: pass drift=True "
+                             "(or a path/DriftLog) alongside it")
+        policy = sentinel if isinstance(sentinel, SentinelPolicy) else None
+        if not (sentinel is True or policy is not None):
+            raise TypeError(f"sentinel must be True/False/None, a "
+                            f"SentinelPolicy or a DriftSentinel; got "
+                            f"{sentinel!r}")
+        return DriftSentinel(self.drift, self.backend, policy=policy,
+                             registry=self.telemetry.registry,
+                             tracer=self.tracer)
+
+    def health(self) -> dict[str, Any]:
+        """Evaluate the SLOs now; returns the health verdict.
+
+        ``{"state": "healthy" | "degraded" | "breach", "violated":
+        [...], "objectives": {...}}`` — see
+        :class:`~repro.obs.health.HealthMonitor`.  The worker also
+        evaluates periodically while serving, so state transitions
+        land in the tracer/registry even if nobody polls this.
+        """
+        self._flush_obs()
+        stats = self.cache.stats
+        hit_rate = stats.hit_rate if stats.requests else None
+        with self._cond:
+            qd = self._pending
+        return self._health.evaluate(
+            submitted=self.telemetry.submitted, shed=self.telemetry.shed,
+            queue_depth=qd, cache_hit_rate=hit_rate)
+
+    def _periodic(self) -> None:
+        """Idle-loop upkeep: rate-limited health + sentinel sweeps.
+
+        Failures here must never take the worker down with them — a
+        sentinel refit hitting a torn store is telemetry's problem,
+        not the serving path's.
+        """
+        try:
+            stats = self.cache.stats
+            self._health.maybe_evaluate(
+                submitted=self.telemetry.submitted,
+                shed=self.telemetry.shed, queue_depth=self._pending,
+                cache_hit_rate=(stats.hit_rate if stats.requests
+                                else None))
+            if self.sentinel is not None:
+                self.sentinel.poll()
+        except Exception:
+            if self.tracer is not None:
+                self.tracer.instant("obs.periodic_error", cat="health")
+
+    def metric_families(self) -> dict[str, Any]:
+        """The engine's full exposition, as typed metric families.
+
+        Everything in the telemetry registry (latency/queue/batch
+        summaries, phase histograms folded into one ``phase_seconds``
+        family with a ``phase`` label, health/sentinel counters) plus
+        per-app admission counters and per-bucket launch counts — all
+        stamped with the stable identity labels ``backend`` (the
+        resolved backend's ``cache_key()``) and ``device`` kind.
+        """
+        from repro.obs.exporter import MetricFamily, registry_families
+        from repro.tune.store import detect_device_kind
+        self._flush_obs()
+        base = {"backend": self._backend_key,
+                "device": detect_device_kind()}
+        rules = {f"phase_{p}_s": ("phase_seconds", {"phase": p})
+                 for p in PHASES}
+        fams = registry_families(self.telemetry.registry, labels=base,
+                                 rules=rules)
+        app_gauge = MetricFamily("repro_app_queued", "gauge",
+                                 "requests queued per app")
+        app_weight = MetricFamily("repro_app_weight", "gauge",
+                                  "fairness weight per app")
+        app_served = MetricFamily("repro_app_served", "counter",
+                                  "requests taken into batches per app")
+        app_shed = MetricFamily("repro_app_shed", "counter",
+                                "admissions rejected per app")
+        app_batches = MetricFamily("repro_app_batches", "counter",
+                                   "batches formed per app")
+        with self._cond:
+            rows = [(aq.app.graph.name, sig, len(aq.q), aq.weight,
+                     aq.served, aq.shed, aq.batches)
+                    for sig, aq in self._queues.items()]
+        for name, sig, queued, weight, served, shed, batches in rows:
+            labels = dict(base, app=name, signature=sig[:12])
+            app_gauge.add(queued, labels)
+            app_weight.add(weight, labels)
+            app_served.add(served, labels, "_total")
+            app_shed.add(shed, labels, "_total")
+            app_batches.add(batches, labels, "_total")
+        buckets = MetricFamily("repro_bucket_launches", "counter",
+                               "kernel launches per padded batch width")
+        for width, n in sorted(self._batcher.bucket_launches.items()):
+            buckets.add(n, dict(base, width=width), "_total")
+        for fam in (app_gauge, app_weight, app_served, app_shed,
+                    app_batches, buckets):
+            if fam.samples:
+                fams[fam.name] = fam
+        if self.drift is not None and self.drift.max_rows is not None:
+            rot = MetricFamily("repro_drift_rotated_rows", "counter",
+                               "drift rows retired by log rotation")
+            rot.add(self.drift.rotated_rows, base, "_total")
+            fams[rot.name] = rot
+        return fams
+
+    def openmetrics(self) -> str:
+        """The live OpenMetrics/Prometheus exposition text."""
+        from repro.obs.exporter import render_openmetrics
+        return render_openmetrics(self.metric_families())
+
+    def serve_metrics(self, *, host: str = "127.0.0.1", port: int = 0):
+        """Start (or return) the scrape endpoint for this engine.
+
+        Returns the :class:`~repro.obs.exporter.MetricsHTTPServer`;
+        its ``.url`` is what a Prometheus scrape config points at.
+        The endpoint dies with the engine (``close()``).
+        """
+        if self._metrics_server is None:
+            from repro.obs.exporter import MetricsHTTPServer
+            self._metrics_server = MetricsHTTPServer(self.openmetrics,
+                                                     host=host, port=port)
+        return self._metrics_server
+
+    # ------------------------------------------------------------------
     # lifecycle
     # ------------------------------------------------------------------
     def start(self) -> None:
@@ -474,6 +636,9 @@ class StreamEngine:
             self._fail_all(RuntimeError("engine closed"))
         if self.drift is not None:
             self.drift.flush()
+        if self._metrics_server is not None:
+            self._metrics_server.close()
+            self._metrics_server = None
 
     def __enter__(self) -> "StreamEngine":
         return self
@@ -503,6 +668,7 @@ class StreamEngine:
                         and not self._pool.active):
                     break
                 self._flush_obs()      # idle: sync deferred telemetry
+                self._periodic()       # rate-limited health + sentinel
                 self._wait_for_work()
         except BaseException as e:  # worker must never die silently
             self._fail_all(e)
@@ -696,6 +862,8 @@ class StreamEngine:
             self._obs.append((now, None, {"readback": now - t0},
                               done, svc))
             backlog = len(self._obs)
+        if done:
+            self._health.observe_latencies(done)
         for event in wake:
             event.set()
         # trace/drift emission AFTER waking waiters: it is retroactive
@@ -766,7 +934,7 @@ class StreamEngine:
                 [list(shape) for _n, shape in self._io_specs.get(sig, [])],
                 self.backend.name, modeled * width, svc,
                 app=app.graph.name, width=width, batch=len(batch),
-                features=features)
+                backend_key=self._backend_key, features=features)
 
     def _wait_for_work(self) -> None:
         """Park until new work arrives or the formation deadline lands."""

@@ -154,8 +154,14 @@ class Telemetry:
     def _phase(self, phase: str):
         h = self._phases.get(phase)
         if h is None:
-            h = self._phases[phase] = self.registry.histogram(
-                f"phase_{phase}_s", self._max_samples, self._seed)
+            # double-checked under the lock: a snapshot() iterating
+            # the phase table concurrently with the worker's flush
+            # must never see the dict resize mid-iteration
+            with self._lock:
+                h = self._phases.get(phase)
+                if h is None:
+                    h = self._phases[phase] = self.registry.histogram(
+                        f"phase_{phase}_s", self._max_samples, self._seed)
         return h
 
     def observe_phase(self, phase: str, seconds: float) -> None:
@@ -212,9 +218,12 @@ class Telemetry:
                 n_done += len(completions)
                 self._latency.extend(completions)
                 with self._lock:
-                    if self._t_first is None:
+                    # min/max (not first/latest writer): two threads
+                    # flushing out of order must not shrink the span
+                    if self._t_first is None or now < self._t_first:
                         self._t_first = now
-                    self._t_last = now
+                    if self._t_last is None or now > self._t_last:
+                        self._t_last = now
             if service_s is not None:
                 self.observe_service(service_s)
         if n_done:
@@ -267,26 +276,37 @@ class Telemetry:
     def _pct(xs: list[float], q: float) -> float:
         return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
 
-    def snapshot(self) -> dict[str, Any]:
-        """Measured serving metrics so far."""
-        lat = self._latency.samples()
-        depths = self._queue_depth.samples()
-        sizes = self._batch_size.samples()
+    def snapshot(self, *, flat: bool = False) -> dict[str, Any]:
+        """Measured serving metrics so far (JSON-safe).
+
+        Percentile keys from an **empty** latency reservoir come back
+        ``None`` with ``latency_samples == 0`` — never an ``inf``/NaN
+        that breaks a JSON consumer, and never a fake ``0.0`` that
+        reads as a zero-latency engine.  Non-finite observations (a
+        hung launch's clock) are filtered before every percentile.
+        Safe to call from any thread, concurrently with the worker's
+        bulk-ingest flush.  ``flat=True`` returns one level of dotted
+        keys (``phases.launch.p99_ms``) for CSV/JSON sinks.
+        """
+        lat = self._latency.finite_samples()
+        depths = self._queue_depth.finite_samples()
+        sizes = self._batch_size.finite_samples()
         completed = self._c_completed.value
         with self._lock:
             span = ((self._t_last - self._t_first)
                     if (self._t_first is not None and completed > 1)
                     else 0.0)
             ewma = self._service_ewma_s
+            phase_items = list(self._phases.items())
         tput = (completed - 1) / span if span else 0.0
         phases = {}
-        for p, h in self._phases.items():
-            xs = h.samples()
+        for p, h in phase_items:
+            xs = h.finite_samples()
             if xs:
                 phases[p] = {"mean_ms": float(np.mean(xs)) * 1e3,
                              "p99_ms": self._pct(xs, 99) * 1e3,
                              "count": h.count}
-        return {
+        out = {
             "submitted": self._c_submitted.value,
             "completed": completed,
             "shed": self._c_shed.value,
@@ -296,15 +316,20 @@ class Telemetry:
             "throughput_rps": tput,
             "replicas": self.replicas,
             "throughput_per_replica_rps": tput / self.replicas,
-            "latency_p50_ms": self._pct(lat, 50) * 1e3,
-            "latency_p99_ms": self._pct(lat, 99) * 1e3,
-            "latency_mean_ms": float(np.mean(lat)) * 1e3 if lat else 0.0,
+            "latency_samples": len(lat),
+            "latency_p50_ms": self._pct(lat, 50) * 1e3 if lat else None,
+            "latency_p99_ms": self._pct(lat, 99) * 1e3 if lat else None,
+            "latency_mean_ms": float(np.mean(lat)) * 1e3 if lat else None,
             "queue_depth_mean": (float(np.mean(depths))
                                  if depths else 0.0),
             "queue_depth_max": (int(max(depths)) if depths else 0),
             "batch_size_mean": (float(np.mean(sizes))
                                 if sizes else 0.0),
         }
+        if flat:
+            from repro.obs.exporter import flatten_report
+            return flatten_report(out)
+        return out
 
     def report(self, *, cache: Any = None,
                modeled: dict[str, Any] | None = None) -> dict[str, Any]:

@@ -76,6 +76,9 @@ __all__ = ["CalibratedSpec", "CalibrationResult", "CalibrationStore",
 #: bump when the fit/record format changes; readers skip other versions
 CALIBRATION_VERSION = 1
 
+#: prior fits kept in a record's ``history`` chain (freshest first)
+_HISTORY_KEEP = 8
+
 #: below this many usable rows the fit refuses and keeps the seed spec
 MIN_ROWS = 8
 
@@ -383,7 +386,7 @@ def calibrate(rows: Iterable[DriftRow] | DriftLog,
 # ----------------------------------------------------------------------
 
 class CalibrationStore:
-    """Atomic on-disk store of fitted specs, beside the tuning cache.
+    """Atomic, *versioned* on-disk store of fitted specs.
 
     One JSON file per ``(backend cache_key, device_kind)`` under
     ``<root>/calibration/`` — same root as the
@@ -391,6 +394,19 @@ class CalibrationStore:
     everything learned about this machine.  Writes go through a temp
     file + ``os.replace`` (never a torn record); records carry
     :data:`CALIBRATION_VERSION` and readers skip other versions.
+
+    Each record is a **version chain**: the current fit (monotone
+    ``seq``, a ``stale`` flag) plus up to ``_HISTORY_KEEP`` prior fits
+    under ``history`` (freshest first).  :meth:`put` supersedes the
+    current fit, pushing it into history; :meth:`mark_stale` flags the
+    current fit without deleting anything (the sentinel does this when
+    drift statistics say the fit no longer predicts reality);
+    :meth:`get` returns the **freshest non-stale** spec in the chain —
+    so ``compile_graph(calibrate="auto")`` quietly falls back to an
+    older good fit, or to a fresh fit from the drift log, rather than
+    serving constants known to be wrong.  Records written before this
+    scheme read as ``seq 0, not stale`` — both directions stay
+    compatible without a :data:`CALIBRATION_VERSION` bump.
     """
 
     def __init__(self, root: str | None = None):
@@ -405,42 +421,18 @@ class CalibrationStore:
         ).hexdigest()[:24]
         return os.path.join(self.root, digest + ".json")
 
-    def get(self, backend_key: str,
-            device_kind: str) -> CalibratedSpec | None:
-        path = self._path(backend_key, device_kind)
-        with self._lock:
-            if path in self._memo:
-                return self._memo[path]
-        spec: CalibratedSpec | None = None
+    def _load(self, path: str) -> dict[str, Any] | None:
+        """The raw record at ``path``, or None (missing/torn/foreign)."""
         try:
             with open(path) as f:
                 raw = json.load(f)
             if raw.get("version") == CALIBRATION_VERSION:
-                spec = spec_from_json(raw["spec"])
-        except (OSError, ValueError, KeyError, TypeError):
-            spec = None
-        with self._lock:
-            self._memo[path] = spec
-        return spec
+                return raw
+        except (OSError, ValueError, TypeError):
+            pass
+        return None
 
-    def put(self, backend_key: str, device_kind: str,
-            spec: CalibratedSpec, *,
-            result: CalibrationResult | None = None) -> str:
-        """Persist ``spec`` atomically; returns the record path."""
-        path = self._path(backend_key, device_kind)
-        record: dict[str, Any] = {
-            "version": CALIBRATION_VERSION,
-            "backend": backend_key,
-            "device_kind": device_kind,
-            "created_at": time.time(),
-            "spec": spec_to_json(spec),
-        }
-        if result is not None:
-            record["fit"] = {"n_rows": result.n_rows,
-                             "n_excluded": result.n_excluded,
-                             "n_unusable": result.n_unusable,
-                             "iterations": result.iterations,
-                             "params": result.params}
+    def _write(self, path: str, record: dict[str, Any]) -> None:
         os.makedirs(self.root, exist_ok=True)
         fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp")
         try:
@@ -453,9 +445,104 @@ class CalibrationStore:
             except OSError:
                 pass
             raise
+
+    @staticmethod
+    def _chain(raw: dict[str, Any]) -> list[dict[str, Any]]:
+        """Version entries, freshest first: the record then history."""
+        chain = [raw]
+        hist = raw.get("history")
+        if isinstance(hist, list):
+            chain.extend(h for h in hist if isinstance(h, dict))
+        return chain
+
+    def latest(self, backend_key: str,
+               device_kind: str) -> dict[str, Any] | None:
+        """The raw current record (including ``seq``/``stale``/
+        ``history``), or None."""
+        return self._load(self._path(backend_key, device_kind))
+
+    def versions(self, backend_key: str,
+                 device_kind: str) -> list[dict[str, Any]]:
+        """The whole version chain, freshest first (may be empty)."""
+        raw = self.latest(backend_key, device_kind)
+        return self._chain(raw) if raw is not None else []
+
+    def get(self, backend_key: str,
+            device_kind: str) -> CalibratedSpec | None:
+        """The freshest **non-stale** fitted spec, or None."""
+        path = self._path(backend_key, device_kind)
+        with self._lock:
+            if path in self._memo:
+                return self._memo[path]
+        spec: CalibratedSpec | None = None
+        raw = self._load(path)
+        if raw is not None:
+            for entry in self._chain(raw):
+                if entry.get("stale"):
+                    continue
+                try:
+                    spec = spec_from_json(entry["spec"])
+                except (KeyError, ValueError, TypeError):
+                    continue
+                break
+        with self._lock:
+            self._memo[path] = spec
+        return spec
+
+    def put(self, backend_key: str, device_kind: str,
+            spec: CalibratedSpec, *,
+            result: CalibrationResult | None = None) -> str:
+        """Persist ``spec`` as the new current version; returns the
+        record path.  The previous current version (if any) moves into
+        ``history`` with its ``stale`` flag intact."""
+        path = self._path(backend_key, device_kind)
+        prev = self._load(path)
+        seq = 1
+        history: list[dict[str, Any]] = []
+        if prev is not None:
+            seq = int(prev.get("seq", 0)) + 1
+            demoted = {k: prev[k] for k in
+                       ("seq", "created_at", "spec", "stale", "fit")
+                       if k in prev}
+            demoted.setdefault("seq", 0)
+            demoted.setdefault("stale", False)
+            history = [demoted] + self._chain(prev)[1:]
+            history = history[:_HISTORY_KEEP]
+        record: dict[str, Any] = {
+            "version": CALIBRATION_VERSION,
+            "backend": backend_key,
+            "device_kind": device_kind,
+            "created_at": time.time(),
+            "seq": seq,
+            "stale": False,
+            "spec": spec_to_json(spec),
+        }
+        if result is not None:
+            record["fit"] = {"n_rows": result.n_rows,
+                             "n_excluded": result.n_excluded,
+                             "n_unusable": result.n_unusable,
+                             "iterations": result.iterations,
+                             "params": result.params}
+        if history:
+            record["history"] = history
+        self._write(path, record)
         with self._lock:
             self._memo[path] = spec
         return path
+
+    def mark_stale(self, backend_key: str, device_kind: str) -> bool:
+        """Flag the current fit stale (kept on disk, skipped by
+        :meth:`get`).  Returns True when a record was updated."""
+        path = self._path(backend_key, device_kind)
+        raw = self._load(path)
+        if raw is None or raw.get("stale"):
+            return raw is not None
+        raw["stale"] = True
+        raw["stale_at"] = time.time()
+        self._write(path, raw)
+        with self._lock:
+            self._memo.pop(path, None)
+        return True
 
     def invalidate(self, backend_key: str, device_kind: str) -> None:
         path = self._path(backend_key, device_kind)

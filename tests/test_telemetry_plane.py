@@ -1,0 +1,735 @@
+"""Production telemetry plane: exporter, health, sentinel, rotation.
+
+PR 10's acceptance surface in one place:
+
+- the OpenMetrics renderer round-trips through its own strict parser
+  (names, label escaping, counter ``_total``, ``# EOF``) and the live
+  scrape endpoint serves monotone counters;
+- the SLO health monitor's hysteresis is pinned white-box: a metric
+  alternating pass/fail at its threshold parks in ``degraded`` and
+  can never flap ``healthy <-> breach``;
+- the drift log rotates at its row cap without losing the rolling
+  window (``rows()`` and ``drift_report`` span the rotation);
+- the versioned :class:`CalibrationStore` bumps ``seq``, keeps stale
+  ancestors in ``history``, and reads pre-versioning records;
+- the END-TO-END loop: an engine serving real traffic whose drift
+  rows were generated under a deliberately mis-scaled spec has its
+  sentinel flag staleness, run :func:`calibrate`, and persist a
+  versioned fit — after which ``compile_graph(calibrate="auto")``
+  resolves the refit spec with **no manual calibrate() call** — and
+  the same live engine's ``/metrics`` scrape parses clean with
+  per-app labels.
+"""
+from __future__ import annotations
+
+import importlib.util
+import json
+import math
+import os
+import threading
+import time
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.core import DataflowGraph, compile_graph
+from repro.core.apps import JACOBI3, LAPLACE3, _conv
+from repro.obs.drift import (DriftLog, DriftRow, drift_report,
+                             predict_features)
+from repro.obs.exporter import (CONTENT_TYPE, MetricFamily,
+                                MetricsHTTPServer, flatten_report,
+                                parse_openmetrics, registry_families,
+                                render_openmetrics, validate_openmetrics,
+                                write_openmetrics)
+from repro.obs.health import SLO, STATES, HealthMonitor
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.sentinel import DriftSentinel, SentinelPolicy
+from repro.runtime import StreamEngine, Telemetry
+from repro.tune.calibrate import (CALIBRATION_VERSION, CalibratedSpec,
+                                  CalibrationStore, spec_to_json)
+from repro.tune.store import detect_device_kind
+
+_ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _load_compare():
+    """benchmarks/ is not a package; load the gate module by path."""
+    path = os.path.join(_ROOT, "benchmarks", "compare.py")
+    spec = importlib.util.spec_from_file_location("bench_compare", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _diamond(h=32, w=128, name="diamond"):
+    g = DataflowGraph(name)
+    x = g.input("x", (h, w))
+    s1 = g.stencil(x, (3, 3), _conv(LAPLACE3), name="lap")
+    s2 = g.stencil(x, (3, 3), _conv(JACOBI3), name="jac")
+    g.output(g.point2(s1, s2, lambda u, v: u - v, name="merge"), "y")
+    return g
+
+
+def _true_spec() -> CalibratedSpec:
+    """Ground truth deliberately far from every seed constant."""
+    return CalibratedSpec(clock_hz=5e8, hbm_bw=2e11, step_overhead_s=3e-5,
+                          ii_scale=(("point", 1.0), ("stencil", 2.5)))
+
+
+def _alpha(spec, kind: str = "point") -> float:
+    """Gauge-invariant per-kind cost: the fit pins the reference
+    kind's multiplier to 1.0, so only ``ii_scale / clock`` compares."""
+    return dict(spec.ii_scale)[kind] / spec.clock_hz
+
+
+def _trial_features(i: int) -> dict:
+    """Cycle the four regimes that make every constant identifiable.
+
+    The grid multiplier varies with ``i`` so dedup inside
+    :func:`calibrate` keeps enough distinct rows for a full-rank fit.
+    """
+    regime = ("overhead", "dma", "compute_point", "compute_stencil")[i % 4]
+    grid = 1 + (i % 6)
+    if regime == "overhead":
+        g = {"grid": 64 * grid, "bytes_step": 512.0,
+             "steps": {"point": 200.0}}
+    elif regime == "dma":
+        g = {"grid": grid, "bytes_step": 32.0 * 2.0 ** 20,
+             "steps": {"point": 500.0}}
+    elif regime == "compute_point":
+        g = {"grid": grid, "bytes_step": 512.0,
+             "steps": {"point": 2e7}}
+    else:
+        g = {"grid": grid, "bytes_step": 512.0,
+             "steps": {"stencil": 2e7}}
+    return {"groups": [g]}
+
+
+def _write_trials(log: DriftLog, *, backend_key: str, n: int = 24,
+                  mis_scale: float = 10.0, measured_scale: float = 1.0,
+                  backend: str = "xla") -> None:
+    """Append trial rows: modeled under a mis-scaled spec, measured
+    under the true one (scaled by ``measured_scale`` to simulate the
+    machine drifting after a fit)."""
+    true = _true_spec()
+    for i in range(n):
+        feats = _trial_features(i)
+        measured = predict_features(feats, true) * measured_scale
+        log.record("trial", f"sig{i % 5}", [[32, 128]], backend,
+                   predict_features(feats, true) / mis_scale, measured,
+                   features=feats, backend_key=backend_key)
+    log.flush()
+
+
+# ----------------------------------------------------------------------
+# OpenMetrics exporter: render <-> strict parse
+# ----------------------------------------------------------------------
+def test_openmetrics_round_trip_label_escaping():
+    fam = MetricFamily("weird", "gauge", 'help with "quotes"\nand lines')
+    nasty = {"app": 'say "hi"', "path": "a\\b", "msg": "line\nbreak"}
+    fam.add(1.5, nasty)
+    text = render_openmetrics([fam])
+    parsed = parse_openmetrics(text)
+    assert parsed["weird"]["type"] == "gauge"
+    (suffix, labels, value), = parsed["weird"]["samples"]
+    assert suffix == "" and value == 1.5
+    assert labels == nasty          # escaping survived the round trip
+
+
+def test_openmetrics_counter_total_and_summary_series():
+    reg = MetricsRegistry()
+    reg.counter("served").inc(7)
+    reg.histogram("latency_s").extend([0.01, 0.02, 0.04])
+    reg.histogram("empty_s")        # registered, never observed
+    text = render_openmetrics(registry_families(reg, labels={"app": "a"}))
+    parsed = parse_openmetrics(text)
+    assert parsed["repro_served"]["type"] == "counter"
+    (suffix, labels, value), = parsed["repro_served"]["samples"]
+    assert suffix == "_total" and value == 7 and labels["app"] == "a"
+    lat = parsed["repro_latency_s"]
+    assert lat["type"] == "summary"
+    series = {s for s, _, _ in lat["samples"]}
+    assert {"_count", "_sum"} <= series
+    quantiles = {l["quantile"] for _, l, v in lat["samples"]
+                 if "quantile" in l}
+    assert quantiles == {"0.5", "0.9", "0.99"}
+    # the empty reservoir exports its count of 0 and NO quantiles —
+    # never a fake 0.0 percentile
+    empty = parsed["repro_empty_s"]["samples"]
+    assert {s for s, _, _ in empty} == {"_count", "_sum"}
+    assert all(v == 0 for _, _, v in empty)
+
+
+def test_openmetrics_skips_none_and_nonfinite_values():
+    fam = MetricFamily("g", "gauge")
+    fam.add(None, {"k": "none"})
+    fam.add(float("nan"), {"k": "nan"})
+    fam.add(float("inf"), {"k": "inf"})
+    fam.add(2.0, {"k": "ok"})
+    parsed = parse_openmetrics(render_openmetrics([fam]))
+    assert [l["k"] for _, l, _ in parsed["g"]["samples"]] == ["ok"]
+
+
+def test_openmetrics_rules_fold_phase_histograms():
+    reg = MetricsRegistry()
+    reg.histogram("phase_launch_s").observe(0.01)
+    reg.histogram("phase_form_s").observe(0.02)
+    rules = {f"phase_{p}_s": ("phase_seconds", {"phase": p})
+             for p in ("launch", "form")}
+    fams = registry_families(reg, rules=rules)
+    assert set(fams) == {"repro_phase_seconds"}
+    phases = {l["phase"] for s in fams["repro_phase_seconds"].samples
+              for l in [s.labels]}
+    assert phases == {"launch", "form"}
+    parse_openmetrics(render_openmetrics(fams))   # and it renders clean
+
+
+def test_openmetrics_validator_rejections():
+    good = render_openmetrics([MetricFamily("x", "gauge")])
+    # missing EOF sentinel
+    with pytest.raises(ValueError, match="EOF"):
+        parse_openmetrics(good.replace("# EOF\n", ""))
+    # counter sample without the mandatory _total suffix
+    with pytest.raises(ValueError, match="_total"):
+        parse_openmetrics("# TYPE c counter\nc 1\n# EOF\n")
+    # sample preceding its TYPE line
+    with pytest.raises(ValueError, match="precedes"):
+        parse_openmetrics("y 1\n# TYPE y gauge\n# EOF\n")
+    # malformed label block
+    with pytest.raises(ValueError, match="label"):
+        parse_openmetrics('# TYPE z gauge\nz{bad-name="v"} 1\n# EOF\n')
+    # duplicate family is a render-time error
+    with pytest.raises(ValueError, match="duplicate"):
+        render_openmetrics([MetricFamily("d", "gauge"),
+                            MetricFamily("d", "counter")])
+    stats = validate_openmetrics(good)
+    assert stats["families"] == 1
+
+
+def test_openmetrics_file_export_and_flatten(tmp_path):
+    path = str(tmp_path / "metrics.prom")
+    write_openmetrics(path, render_openmetrics(
+        [MetricFamily("up", "gauge")]))
+    with open(path) as f:
+        parse_openmetrics(f.read())
+    flat = flatten_report({"a": {"b": {"c": 1}}, "d": 2})
+    assert flat == {"a.b.c": 1, "d": 2}
+
+
+def test_metrics_http_server_scrape_monotone_counters():
+    reg = MetricsRegistry()
+    reg.counter("hits").inc(3)
+    with MetricsHTTPServer(
+            lambda: render_openmetrics(registry_families(reg))) as srv:
+        def scrape():
+            with urllib.request.urlopen(srv.url, timeout=10) as resp:
+                assert resp.headers["Content-Type"] == CONTENT_TYPE
+                return parse_openmetrics(resp.read().decode())
+        first = scrape()
+        reg.counter("hits").inc(2)
+        second = scrape()
+        v1 = first["repro_hits"]["samples"][0][2]
+        v2 = second["repro_hits"]["samples"][0][2]
+        assert (v1, v2) == (3, 5)       # monotone across scrapes
+        assert srv.scrapes >= 2
+
+
+# ----------------------------------------------------------------------
+# SLO health monitor: hysteresis, white-box
+# ----------------------------------------------------------------------
+def test_health_alternating_violation_never_flaps_to_breach():
+    """A metric oscillating at its threshold parks in ``degraded``."""
+    mon = HealthMonitor(SLO(max_shed_rate=None, max_queue_depth=4),
+                        breach_after=3, recover_after=3)
+    states = []
+    for i in range(12):
+        out = mon.evaluate(queue_depth=10 if i % 2 else 0)
+        states.append(out["state"])
+    assert "breach" not in states
+    assert states[-1] == "degraded"
+    # no healthy<->breach edge exists anywhere in the audit trail
+    for _, frm, to, _ in mon.transitions:
+        assert {frm, to} != {"healthy", "breach"}
+
+
+def test_health_breach_and_recovery_pass_through_degraded():
+    mon = HealthMonitor(SLO(max_shed_rate=None, max_queue_depth=4),
+                        breach_after=3, recover_after=3)
+    for _ in range(3):
+        mon.evaluate(queue_depth=10)
+    assert mon.state == "breach"
+    for _ in range(2):
+        mon.evaluate(queue_depth=0)
+    assert mon.state == "degraded"      # recovering, not yet healthy
+    mon.evaluate(queue_depth=0)
+    assert mon.state == "healthy"
+    assert [(f, t) for _, f, t, _ in mon.transitions] == [
+        ("healthy", "degraded"), ("degraded", "breach"),
+        ("breach", "degraded"), ("degraded", "healthy")]
+
+
+def test_health_shed_rate_is_per_interval_not_cumulative():
+    mon = HealthMonitor(SLO(max_shed_rate=0.05))
+    assert mon.evaluate(submitted=100, shed=0)["violated"] == []
+    out = mon.evaluate(submitted=100, shed=10)   # 10 sheds, 0 new subs
+    assert out["violated"] == ["shed_rate"]
+    assert out["objectives"]["shed_rate"]["value"] == 1.0
+    # same counters again: no offered traffic -> objective goes quiet
+    # (an engine that shed during a spike an hour ago is not unhealthy)
+    out = mon.evaluate(submitted=100, shed=10)
+    assert out["violated"] == []
+    assert out["objectives"]["shed_rate"]["value"] is None
+
+
+def test_health_latency_objective_waits_for_samples():
+    mon = HealthMonitor(SLO(latency_p99_s=0.001, max_shed_rate=None),
+                        min_latency_samples=20)
+    mon.observe_latencies([1.0] * 5)
+    assert mon.evaluate()["violated"] == []      # too few for a p99
+    mon.observe_latencies([1.0] * 20)
+    assert mon.evaluate()["violated"] == ["latency_p99"]
+
+
+def test_health_registry_counters_and_state_gauge():
+    reg = MetricsRegistry()
+    mon = HealthMonitor(SLO(max_shed_rate=None, max_queue_depth=1),
+                        breach_after=2, registry=reg)
+    assert reg.gauge("health_state").value == 0.0
+    mon.evaluate(queue_depth=5)
+    mon.evaluate(queue_depth=5)
+    assert reg.gauge("health_state").value == float(STATES.index("breach"))
+    assert reg.counter("health_evaluations").value == 2
+    assert reg.counter("health_violation_queue_depth").value == 2
+    assert reg.counter("health_transitions").value == 2
+
+
+def test_engine_health_defaults_to_latency_budget_slo():
+    g = _diamond()
+    x = np.zeros((32, 128), np.float32)
+    with StreamEngine(backend="xla", latency_budget=10.0,
+                      max_batch=4) as eng:
+        eng.submit(g, {"x": x}).result(timeout=600)
+        out = eng.health()
+    assert out["state"] == "healthy"
+    assert set(out["objectives"]) == {"latency_p99", "shed_rate"}
+
+
+# ----------------------------------------------------------------------
+# drift log rotation
+# ----------------------------------------------------------------------
+def _n_rows(log: DriftLog, n: int, start: int = 0) -> None:
+    for i in range(start, start + n):
+        feats = _trial_features(i)
+        log.record("trial", f"s{i}", [[8, 8]], "pallas", 1e-5,
+                   predict_features(feats, _true_spec()), features=feats)
+    log.flush()
+
+
+def test_drift_log_rotation_caps_disk_and_counts_retired(tmp_path):
+    log = DriftLog(str(tmp_path / "d.jsonl"), max_rows=10)
+    _n_rows(log, 8)
+    assert not os.path.exists(log.rotated_path)
+    assert log.rotated_rows == 0
+    _n_rows(log, 8, start=8)                 # 16 > 10: first rotation
+    assert os.path.exists(log.rotated_path)
+    assert log.rotated_rows == 0             # nothing dropped yet
+    assert len(log.rows()) == 16             # both generations visible
+    _n_rows(log, 8, start=16)
+    _n_rows(log, 8, start=24)                # second rotation: 16 retired
+    assert log.rotated_rows == 16
+    rows = log.rows()
+    assert len(rows) == 16                   # bounded: <= 2 * max_rows
+    # the *newest* rows survived, oldest-first order preserved
+    assert [r.signature for r in rows] == [f"s{i}" for i in range(16, 32)]
+    assert len(log) == 16
+
+
+def test_drift_report_and_window_span_rotation(tmp_path):
+    log = DriftLog(str(tmp_path / "d.jsonl"), max_rows=6)
+    for i in range(18):                      # several rotations deep
+        feats = _trial_features(i)
+        log.record("trial", f"s{i % 4}", [[8, 8]], "pallas", 1e-5,
+                   predict_features(feats, _true_spec()), features=feats)
+        log.flush()
+    visible = log.rows()
+    rep = drift_report(log, spec=_true_spec())
+    assert rep["n"] == len(visible) > 0
+    assert rep["with_spec"]["spearman"] > 0.9   # window is coherent
+    # a sentinel window over the same log sees the same visible rows
+    sent = DriftSentinel(log, "pallas",
+                         store=CalibrationStore(str(tmp_path / "s")))
+    assert len(sent.window_rows()) == len(visible)
+
+
+def test_drift_log_rejects_bad_cap_and_clear_removes_both(tmp_path):
+    with pytest.raises(ValueError):
+        DriftLog(str(tmp_path / "x.jsonl"), max_rows=0)
+    log = DriftLog(str(tmp_path / "d.jsonl"), max_rows=2)
+    _n_rows(log, 7)
+    assert os.path.exists(log.rotated_path)
+    log.clear()
+    assert not os.path.exists(log.path)
+    assert not os.path.exists(log.rotated_path)
+    assert len(log) == 0 and log.rows() == []
+
+
+# ----------------------------------------------------------------------
+# telemetry JSON hygiene
+# ----------------------------------------------------------------------
+def test_telemetry_empty_snapshot_is_null_safe_json():
+    snap = Telemetry().snapshot()
+    assert snap["latency_samples"] == 0
+    assert snap["latency_p50_ms"] is None
+    assert snap["latency_p99_ms"] is None
+    assert snap["latency_mean_ms"] is None
+    assert snap["queue_depth_mean"] == 0.0
+    text = json.dumps(snap)                  # JSON-safe, and no NaN/inf
+    assert "NaN" not in text and "Infinity" not in text
+
+
+def test_telemetry_nonfinite_latencies_filtered():
+    t = Telemetry()
+    now = time.perf_counter()
+    t.observe_batches([(now, 2, {}, [0.01, float("nan")], None),
+                       (now, 2, {}, [float("inf"), 0.03], None)])
+    snap = t.snapshot()
+    assert snap["completed"] == 4            # counted as completions...
+    assert snap["latency_samples"] == 2      # ...but never aggregated
+    assert math.isfinite(snap["latency_p99_ms"])
+    flat = t.snapshot(flat=True)
+    assert flat["latency_samples"] == 2      # dotted view, same hygiene
+
+
+def test_telemetry_snapshot_concurrent_with_flush():
+    """snapshot() must be safe against the worker's bulk-ingest."""
+    t = Telemetry()
+    stop = threading.Event()
+    errors: list[BaseException] = []
+
+    def reader():
+        try:
+            while not stop.is_set():
+                json.dumps(t.snapshot())
+        except BaseException as e:    # noqa: BLE001 - surfacing to main
+            errors.append(e)
+
+    th = threading.Thread(target=reader)
+    th.start()
+    now = time.perf_counter()
+    for i in range(300):
+        t.observe_batches([(now + i * 1e-4, 3,
+                            {"launch": [1e-4], "form": 2e-4},
+                            [1e-3, 2e-3], 1e-3)])
+    stop.set()
+    th.join()
+    assert not errors
+    assert t.snapshot()["completed"] == 600
+
+
+# ----------------------------------------------------------------------
+# versioned calibration store
+# ----------------------------------------------------------------------
+def test_store_put_bumps_seq_and_keeps_history(tmp_path):
+    store = CalibrationStore(str(tmp_path))
+    s1 = CalibratedSpec(clock_hz=1e8, ii_scale=(("point", 1.0),), n_rows=9)
+    s2 = CalibratedSpec(clock_hz=2e8, ii_scale=(("point", 1.0),), n_rows=9)
+    store.put("be@x", "cpu", s1)
+    assert store.latest("be@x", "cpu")["seq"] == 1
+    store.put("be@x", "cpu", s2)
+    raw = store.latest("be@x", "cpu")
+    assert raw["seq"] == 2 and raw["stale"] is False
+    chain = store.versions("be@x", "cpu")
+    assert [e["seq"] for e in chain] == [2, 1]
+    assert store.get("be@x", "cpu") == s2
+
+
+def test_store_mark_stale_hides_fit_until_refit(tmp_path):
+    store = CalibrationStore(str(tmp_path))
+    s1 = CalibratedSpec(clock_hz=1e8, ii_scale=(("point", 1.0),), n_rows=9)
+    store.put("be@x", "cpu", s1)
+    assert store.mark_stale("be@x", "cpu")
+    assert store.get("be@x", "cpu") is None       # kept but skipped
+    assert store.latest("be@x", "cpu")["stale"] is True
+    s2 = CalibratedSpec(clock_hz=2e8, ii_scale=(("point", 1.0),), n_rows=9)
+    store.put("be@x", "cpu", s2)
+    raw = store.latest("be@x", "cpu")
+    assert raw["seq"] == 2                        # stale fits still count
+    assert raw["history"][0]["stale"] is True     # ancestry preserved
+    assert store.get("be@x", "cpu") == s2
+    assert not store.mark_stale("missing", "cpu")
+
+
+def test_store_reads_pre_versioning_records(tmp_path):
+    """A record written before seq/stale existed reads as seq 0."""
+    store = CalibrationStore(str(tmp_path))
+    spec = CalibratedSpec(clock_hz=3e8, ii_scale=(("point", 1.0),),
+                          n_rows=12)
+    old = {"version": CALIBRATION_VERSION, "backend": "be@y",
+           "device_kind": "cpu", "created_at": 0.0,
+           "spec": spec_to_json(spec)}
+    store._write(store._path("be@y", "cpu"), old)
+    assert store.get("be@y", "cpu") == spec
+    s2 = CalibratedSpec(clock_hz=4e8, ii_scale=(("point", 1.0),), n_rows=9)
+    store.put("be@y", "cpu", s2)
+    raw = store.latest("be@y", "cpu")
+    assert raw["seq"] == 1
+    assert raw["history"][0]["seq"] == 0          # legacy demoted as v0
+    assert store.get("be@y", "cpu") == s2
+
+
+# ----------------------------------------------------------------------
+# drift sentinel: staleness policy
+# ----------------------------------------------------------------------
+def _sentinel(tmp_path, log, **kw):
+    from repro.backends import resolve
+    store = kw.pop("store", None) or CalibrationStore(str(tmp_path / "s"))
+    policy = kw.pop("policy", SentinelPolicy(min_interval_s=0.0))
+    return DriftSentinel(log, "xla", store=store, policy=policy, **kw), \
+        store, resolve("xla").cache_key()
+
+
+def test_sentinel_short_window_never_stale(tmp_path):
+    log = DriftLog(str(tmp_path / "d.jsonl"))
+    sent, _, key = _sentinel(tmp_path, log)
+    _write_trials(log, backend_key=key, n=4)
+    out = sent.check()
+    assert out["n_rows"] == 4 and not out["stale"]
+
+
+def test_sentinel_uncalibrated_then_fit_then_quiet(tmp_path):
+    log = DriftLog(str(tmp_path / "d.jsonl"))
+    sent, store, key = _sentinel(tmp_path, log)
+    _write_trials(log, backend_key=key, n=24)
+    out = sent.poll()
+    assert out["reasons"] == ["uncalibrated"]
+    assert out["refit"]["fitted"]
+    kind = detect_device_kind()
+    assert store.latest(key, kind)["seq"] == 1
+    # the recovered constants are the ground truth (noise-free rows)
+    fit = store.get(key, kind)
+    assert abs(_alpha(fit) - _alpha(_true_spec())) / _alpha(
+        _true_spec()) < 0.05
+    # next poll: fresh fit predicts the window -> nothing to do
+    again = sent.poll()
+    assert not again["stale"] and again["active_seq"] == 1
+    assert sent.refits == 1
+
+
+def test_sentinel_bias_drift_marks_stale_and_reversions(tmp_path):
+    log = DriftLog(str(tmp_path / "d.jsonl"))
+    sent, store, key = _sentinel(tmp_path, log)
+    _write_trials(log, backend_key=key, n=24)
+    assert sent.poll()["refit"]["fitted"]
+    kind = detect_device_kind()
+    # the machine drifts 3x slower: re-scored bias ~ log10(3) >> 0.15
+    log.clear()
+    _write_trials(log, backend_key=key, n=24, measured_scale=3.0)
+    out = sent.poll()
+    assert "bias" in out["reasons"]
+    assert abs(out["log10_bias"] - math.log10(3.0)) < 0.1
+    raw = store.latest(key, kind)
+    assert raw["seq"] == 2
+    assert raw["history"][0]["stale"] is True     # decayed fit retired
+    # the refit tracks the 3x-slower machine, gauge-invariantly
+    ratio = _alpha(store.get(key, kind)) / _alpha(_true_spec())
+    assert abs(ratio - 3.0) < 0.2
+
+
+def test_sentinel_new_rows_trigger_and_rate_limit(tmp_path):
+    log = DriftLog(str(tmp_path / "d.jsonl"))
+    sent, _, key = _sentinel(
+        tmp_path, log, policy=SentinelPolicy(min_interval_s=100.0,
+                                             refit_rows=8))
+    _write_trials(log, backend_key=key, n=24)
+    out = sent.poll(now=0.0)
+    assert out["refit"]["fitted"]
+    assert sent.poll(now=1.0) is None             # inside min_interval_s
+    _write_trials(log, backend_key=key, n=8)
+    out = sent.poll(now=200.0)
+    assert out["reasons"] == ["new_rows"]         # fresh evidence
+    assert out["n_new"] >= 8
+
+
+def test_sentinel_ignores_other_backends_and_excluded_kinds(tmp_path):
+    log = DriftLog(str(tmp_path / "d.jsonl"))
+    sent, _, key = _sentinel(tmp_path, log)
+    _write_trials(log, backend_key=key, n=8)
+    _write_trials(log, backend_key="other@deadbeef", n=8)
+    log.record("compile", "sigc", [[8, 8]], "xla", 1e-3, 2e-3,
+               backend_key=key)
+    log.flush()
+    assert len(sent.window_rows()) == 8
+    # pre-PR-10 rows (no backend_key attr) still match by name
+    log.record("trial", "legacy", [[8, 8]], "xla", 1e-5, 2e-5,
+               features=_trial_features(0))
+    log.flush()
+    assert len(sent.window_rows()) == 9
+
+
+def test_sentinel_registry_counters(tmp_path):
+    reg = MetricsRegistry()
+    log = DriftLog(str(tmp_path / "d.jsonl"))
+    sent, _, key = _sentinel(tmp_path, log, registry=reg)
+    _write_trials(log, backend_key=key, n=24)
+    sent.poll()
+    assert reg.counter("sentinel_checks").value == 1
+    assert reg.counter("sentinel_stale").value == 1
+    assert reg.counter("sentinel_refits").value == 1
+    assert reg.gauge("sentinel_rows").value == 24.0
+
+
+def test_engine_sentinel_argument_validation(tmp_path):
+    with StreamEngine(backend="xla", autostart=False) as eng:
+        assert eng.sentinel is None
+    with pytest.raises(ValueError, match="drift"):
+        StreamEngine(backend="xla", sentinel=True, autostart=False)
+    with pytest.raises(TypeError):
+        StreamEngine(backend="xla", sentinel="yes", autostart=False,
+                     drift=str(tmp_path / "d.jsonl"))
+    eng = StreamEngine(backend="xla", sentinel=SentinelPolicy(),
+                       drift=str(tmp_path / "d.jsonl"), autostart=False)
+    try:
+        assert isinstance(eng.sentinel, DriftSentinel)
+    finally:
+        eng.close()
+
+
+# ----------------------------------------------------------------------
+# ACCEPTANCE: end-to-end auto-recalibration + live scrape
+# ----------------------------------------------------------------------
+def test_engine_auto_recalibrates_and_scrapes_clean(tmp_path, monkeypatch):
+    """Serve real traffic; the sentinel (not a human) closes the loop.
+
+    Drift rows generated under a deliberately mis-scaled spec are
+    flagged stale by the engine's own worker loop, ``calibrate()``
+    runs, a *versioned* store entry lands — and a subsequent
+    ``compile_graph(calibrate="auto")`` resolves the refit spec with
+    no manual ``calibrate()`` call anywhere in this test.  The same
+    live engine's OpenMetrics endpoint must parse clean with per-app
+    labels.
+    """
+    from repro.backends import resolve, resolve_calibrated
+    # the engine's default store AND compile_graph's auto-resolution
+    # must agree on a root: both read $REPRO_TUNE_CACHE
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(tmp_path))
+    key = resolve("xla").cache_key()
+    kind = detect_device_kind()
+    log = DriftLog(str(tmp_path / "drift.jsonl"))
+    # serving history recorded under a 10x mis-scaled cost model
+    _write_trials(log, backend_key=key, n=24, mis_scale=10.0)
+    store = CalibrationStore(str(tmp_path))
+    sentinel = DriftSentinel(
+        log, "xla", store=store,
+        policy=SentinelPolicy(min_interval_s=0.0),
+        # the engine's own wall-clock rows must not dilute the
+        # deterministic synthetic fit
+        exclude_kinds=("compile", "launch"))
+
+    g = _diamond()
+    x = np.arange(32 * 128, dtype=np.float32).reshape(32, 128) / 100.0
+    with StreamEngine(backend="xla", drift=log, sentinel=sentinel,
+                      max_batch=4, max_queue=32) as eng:
+        for _ in range(4):
+            eng.submit(g, {"x": x}).result(timeout=600)
+        # the worker's idle loop polls the sentinel; wait for the fit
+        deadline = time.time() + 60.0
+        while store.latest(key, kind) is None and time.time() < deadline:
+            time.sleep(0.05)
+        raw = store.latest(key, kind)
+        assert raw is not None, "sentinel never persisted a fit"
+        assert raw["seq"] == 1 and raw["stale"] is False
+        assert raw["fit"]["n_rows"] >= 8
+        assert sentinel.refits >= 1
+
+        # live scrape: parses clean, per-app labels present
+        srv = eng.serve_metrics()
+        with urllib.request.urlopen(srv.url, timeout=10) as resp:
+            assert resp.headers["Content-Type"] == CONTENT_TYPE
+            parsed = parse_openmetrics(resp.read().decode())
+        served = parsed["repro_app_served"]["samples"]
+        labels = {l["app"]: l for _, l, _ in served}
+        assert "diamond" in labels
+        assert labels["diamond"]["backend"] == key
+        assert labels["diamond"]["device"] == kind
+        assert len(labels["diamond"]["signature"]) == 12
+        assert any(v >= 4 for _, l, v in served if l["app"] == "diamond")
+        # sentinel + health metrics ride the same exposition
+        assert "repro_sentinel_refits" in parsed
+        assert "repro_health_state" in parsed
+
+    # ...and the compiler resolves the auto-refit spec from here on
+    be = resolve_calibrated("xla", "auto")
+    fitted = store.get(key, kind)
+    assert isinstance(fitted, CalibratedSpec)
+    assert be.spec == fitted
+    assert abs(_alpha(fitted) - _alpha(_true_spec())) / _alpha(
+        _true_spec()) < 0.05                         # ground truth
+    app = compile_graph(g, backend="xla", calibrate="auto")
+    ref = app.schedule.graph.reference_eval({"x": x})["y"]
+    np.testing.assert_allclose(np.asarray(app(x=x)["y"]),
+                               np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+
+# ----------------------------------------------------------------------
+# benchmark regression gate
+# ----------------------------------------------------------------------
+def test_compare_rows_matches_by_identity_and_direction():
+    compare = _load_compare()
+    base = [{"name": "a", "h": 64, "us": 100.0, "throughput_rps": 50.0},
+            {"name": "a", "h": 256, "us": 400.0}]
+    # smoke-shaped fresh run: only the h=64 row exists; 10x slower
+    fresh = [{"name": "a", "h": 64, "us": 1000.0, "throughput_rps": 5.0}]
+    out = compare.compare_rows(base, fresh, tol=2.0)
+    assert out["matched"] == 1 and out["unmatched_baseline"] == 1
+    verdicts = {d["metric"]: d["ok"] for d in out["deltas"]}
+    assert verdicts == {"us": False, "throughput_rps": False}
+    # within tolerance both directions pass
+    ok = compare.compare_rows(base, [dict(base[0], us=250.0,
+                                          throughput_rps=20.0)], tol=2.0)
+    assert not ok["failures"]
+
+
+def test_compare_ignores_modeled_metrics_and_formats_table():
+    compare = _load_compare()
+    base = [{"name": "r", "us": 10.0, "modeled_us": 1.0}]
+    fresh = [{"name": "r", "us": 10.0, "modeled_us": 99.0}]
+    out = compare.compare_rows(base, fresh)
+    assert {d["metric"] for d in out["deltas"]} == {"us"}
+    out.update(baseline_path="b.json", fresh_path="f.json",
+               baseline_smoke=False, fresh_smoke=True)
+    table = compare.format_table(out)
+    assert "REGRESSION" not in table and "1 matched" in table
+
+
+def test_compare_main_gates_regressions(tmp_path, capsys):
+    compare = _load_compare()
+    base = str(tmp_path / "base.json")
+    fresh = str(tmp_path / "fresh.json")
+    rows = [{"name": "k", "n": 8, "us": 100.0}]
+    with open(base, "w") as f:
+        json.dump({"rows": rows}, f)
+    with open(fresh, "w") as f:
+        json.dump({"rows": [dict(rows[0], us=120.0)], "smoke": True}, f)
+    assert compare.main([f"{base}:{fresh}"]) == 0
+    with open(fresh, "w") as f:
+        json.dump({"rows": [dict(rows[0], us=900.0)], "smoke": True}, f)
+    assert compare.main([f"{base}:{fresh}"]) == 1
+    assert "REGRESSION" in capsys.readouterr().out
+    # missing files: skipped with a warning, fatal only under --strict
+    missing = str(tmp_path / "nope.json")
+    assert compare.main([f"{base}:{missing}"]) == 0
+    assert compare.main(["--strict", f"{base}:{missing}"]) == 1
+
+
+def test_checked_in_baselines_parse_for_the_gate():
+    """CI diffs experiments/ against these; they must stay loadable."""
+    compare = _load_compare()
+    for name, _ in compare.DEFAULT_PAIRS:
+        path = os.path.join(_ROOT, name)
+        with open(path) as f:
+            payload = json.load(f)
+        rows = payload["rows"]
+        assert rows, f"{name} has no rows"
+        keys = [compare.row_key(r) for r in rows]
+        assert len(keys) == len(set(keys)), f"{name}: ambiguous row identity"
